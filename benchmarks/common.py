@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: wall-time measurement of jit'd callables."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn, *args, repeats=5, warmup=2):
+    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def rand_image(key, hw=224, c=3, batch=1):
+    return jax.random.normal(jax.random.key(key), (batch, hw, hw, c),
+                             jnp.float32)
+
+
+def rand_kernel(key, n, cin, cout):
+    return jax.random.normal(jax.random.key(key), (n, n, cin, cout),
+                             jnp.float32) * 0.1
+
+
+def csv_row(name, us_per_call, derived=""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,55 @@
+"""Render the §Roofline table from experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir="experiments/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt(v, digits=4):
+    if v is None:
+        return "-"
+    return f"{v:.{digits}g}"
+
+
+def main(out_dir=None):
+    if out_dir is None:  # prefer the optimized (v2) sweep when present
+        out_dir = (
+            "experiments/dryrun_v2"
+            if os.path.isdir("experiments/dryrun_v2")
+            else "experiments/dryrun"
+        )
+    cells = load(out_dir)
+    if not cells:
+        print("no dry-run results found; run repro.launch.dryrun first")
+        return
+    print(f"(source: {out_dir})")
+    print("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+          "dominant | useful_ratio | roofline_frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        if "skipped" in c:
+            print(f"| {c['arch']} | {c['shape']} | - | - | - | - | "
+                  f"SKIP: {c['skipped'][:40]} | - | - |")
+            continue
+        r = c.get("roofline", {})
+        print(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {fmt(r.get('compute_s'))} | {fmt(r.get('memory_s'))} "
+            f"| {fmt(r.get('collective_s'))} "
+            f"| {r.get('dominant', '-').replace('_s', '')} "
+            f"| {fmt(r.get('useful_flop_ratio'))} "
+            f"| {fmt(r.get('roofline_fraction'))} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+# One function per paper table. Prints CSV blocks per table plus the
+# roofline table derived from the dry-run artifacts (if present).
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        flops_memory,
+        roofline_table,
+        table2_flowers,
+        table3_coco_pascal,
+        table4_gans,
+    )
+
+    for name, mod in [
+        ("table2_flowers", table2_flowers),
+        ("table3_coco_pascal", table3_coco_pascal),
+        ("table4_gans", table4_gans),
+        ("flops_memory", flops_memory),
+        ("roofline_table", roofline_table),
+    ]:
+        t0 = time.time()
+        print(f"\n===== {name} =====")
+        mod.main()
+        print(f"[{name}] {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: the unified kernel-segregated transpose convolution.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    flop_count,
+    memory_savings_bytes,
+    segregate_kernel,
+    transpose_conv2d,
+)
+
+# a 224x224 RGB feature map and a 5x5 kernel, paper-style
+x = jax.random.normal(jax.random.key(0), (1, 224, 224, 3))
+k = jax.random.normal(jax.random.key(1), (5, 5, 3, 8)) * 0.1
+
+# 1. the paper's baseline: bed-of-nails upsample + dense conv (Algorithm 1)
+y_conv = transpose_conv2d(x, k, padding=2, method="conventional")
+
+# 2. the paper's contribution: unified kernel segregation (Algorithm 2)
+y_uni = transpose_conv2d(x, k, padding=2, method="unified")
+
+# 3. the TPU Pallas kernel (single launch, phase-as-grid-axis; interpret
+#    mode on CPU)
+y_pal = transpose_conv2d(x, k, padding=2, method="pallas")
+
+print("output shape:", y_uni.shape)
+print("max |unified - conventional|:", float(jnp.max(jnp.abs(y_uni - y_conv))))
+print("max |pallas  - conventional|:", float(jnp.max(jnp.abs(y_pal - y_conv))))
+
+# the four sub-kernels (paper Fig. 4)
+subs = segregate_kernel(k)
+print("sub-kernel shapes:", [tuple(s.shape[:2]) for s in subs])
+
+# the arithmetic the segregation saves
+conv = flop_count(224, 5, 3, 8, 2, method="conventional")
+segd = flop_count(224, 5, 3, 8, 2, method="segregated")
+print(f"MACs: conventional {conv:,} vs segregated {segd:,} "
+      f"({conv / segd:.2f}x fewer)")
+print(f"memory savings: {memory_savings_bytes(224, 3, 4, 2) / 1e6:.4f} MB "
+      f"(paper Table 2: 1.8279 MB)")
+
+# it's differentiable end to end (any method)
+grad = jax.grad(
+    lambda k: jnp.sum(transpose_conv2d(x, k, 2, method="unified") ** 2)
+)(k)
+print("grad ok:", grad.shape, bool(jnp.all(jnp.isfinite(grad))))

@@ -1,0 +1,87 @@
+"""End-to-end driver: train a (reduced) DC-GAN whose generator runs on the
+unified kernel-segregated transpose convolution — the paper's own workload.
+
+Non-saturating GAN loss on synthetic band-limited images, AdamW for both
+nets, a few hundred steps on CPU.
+
+Run:  PYTHONPATH=src python examples/train_dcgan.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import SyntheticImages
+from repro.models import gan
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--method", default="unified",
+                    choices=["unified", "conventional", "pallas"])
+    args = ap.parse_args()
+
+    # reduced DC-GAN (channels/16) => 32x32 outputs, CPU-friendly
+    cfg = dataclasses.replace(
+        gan.DCGAN,
+        layers=tuple((hw, cin // 16, max(cout // 16, 3) if i == 3 else cout // 16)
+                     for i, (hw, cin, cout) in enumerate(gan.DCGAN.layers[:3])),
+    )
+    out_hw = cfg.out_hw(cfg.layers[-1][0])
+    out_c = cfg.layers[-1][2]
+    print(f"[dcgan] generator -> {out_hw}x{out_hw}x{out_c}, "
+          f"method={args.method}")
+
+    gp = gan.generator_init(jax.random.key(0), cfg)
+    dp = gan.discriminator_init(jax.random.key(1), out_hw, out_c)
+    opt_cfg = AdamWConfig(lr=2e-4, b1=0.5, b2=0.999, weight_decay=0.0)
+    g_opt = adamw_init(gp, opt_cfg)
+    d_opt = adamw_init(dp, opt_cfg)
+    data = SyntheticImages(hw=out_hw, channels=out_c,
+                           global_batch=args.batch)
+
+    def d_loss_fn(dp, gp, real, z):
+        fake = gan.generator_apply(gp, cfg, z, method=args.method)
+        d_real = gan.discriminator_apply(dp, real)
+        d_fake = gan.discriminator_apply(dp, fake)
+        return (
+            jnp.mean(jax.nn.softplus(-d_real))
+            + jnp.mean(jax.nn.softplus(d_fake))
+        )
+
+    def g_loss_fn(gp, dp, z):
+        fake = gan.generator_apply(gp, cfg, z, method=args.method)
+        return jnp.mean(jax.nn.softplus(-gan.discriminator_apply(dp, fake)))
+
+    @jax.jit
+    def step(gp, dp, g_opt, d_opt, real, z):
+        dl, dg = jax.value_and_grad(d_loss_fn)(dp, gp, real, z)
+        dp, d_opt, _ = adamw_update(dg, d_opt, dp, opt_cfg, opt_cfg.lr)
+        gl, gg = jax.value_and_grad(g_loss_fn)(gp, dp, z)
+        gp, g_opt, _ = adamw_update(gg, g_opt, gp, opt_cfg, opt_cfg.lr)
+        return gp, dp, g_opt, d_opt, gl, dl
+
+    t0 = time.time()
+    for i in range(args.steps):
+        real = data.batch(i)
+        z = jax.random.normal(jax.random.fold_in(jax.random.key(7), i),
+                              (args.batch, cfg.z_dim))
+        gp, dp, g_opt, d_opt, gl, dl = step(gp, dp, g_opt, d_opt, real, z)
+        if i % 20 == 0:
+            print(f"step {i:4d}  g_loss {float(gl):.4f}  "
+                  f"d_loss {float(dl):.4f}  ({time.time() - t0:.1f}s)")
+    img = gan.generator_apply(
+        gp, cfg, jax.random.normal(jax.random.key(9), (1, cfg.z_dim)),
+        method=args.method,
+    )
+    print(f"[dcgan] done: sample range [{float(img.min()):.3f}, "
+          f"{float(img.max()):.3f}], finite={bool(jnp.all(jnp.isfinite(img)))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from repro.configs.base import (
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    SHAPES,
+    ShapeSpec,
+    input_specs,
+    reduced,
+    runnable,
+)
+from repro.configs.registry import ARCH_IDS, all_configs, get_config

@@ -1,0 +1,36 @@
+"""Core: the paper's contribution — unified kernel-segregated transpose conv."""
+from repro.core.segregation import (
+    SubKernels,
+    segregate_kernel,
+    merge_subkernels,
+    stack_subkernels,
+    flop_count,
+    memory_savings_bytes,
+    output_size,
+)
+from repro.core.transpose_conv import (
+    transpose_conv2d,
+    transpose_conv_conventional,
+    transpose_conv_unified,
+    transpose_conv_grouped,
+    transpose_conv_xla,
+    upsample_bed_of_nails,
+)
+from repro.core.dilated_conv import dilated_conv2d
+
+__all__ = [
+    "SubKernels",
+    "segregate_kernel",
+    "merge_subkernels",
+    "stack_subkernels",
+    "flop_count",
+    "memory_savings_bytes",
+    "output_size",
+    "transpose_conv2d",
+    "transpose_conv_conventional",
+    "transpose_conv_unified",
+    "transpose_conv_grouped",
+    "transpose_conv_xla",
+    "upsample_bed_of_nails",
+    "dilated_conv2d",
+]

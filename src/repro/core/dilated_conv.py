@@ -1,0 +1,67 @@
+"""Segregated dilated convolution — the paper's §5 future-work direction.
+
+Dilated (atrous) convolution upsamples the *kernel* with bed-of-nails zeros;
+the exact dual of the paper's technique applies: instead of segregating the
+kernel, segregate the **input** into its four parity phases. For dilation 2:
+
+    out[x, y] = sum_{u,v} I[x + 2u, y + 2v] * K[u, v]
+
+every output element with coordinate parity ``(r, s) = (x%2, y%2)`` touches
+only the input phase ``I[r::2, s::2]`` — so the dilated conv is exactly four
+*dense* convolutions of the strided input phases with the *unmodified* kernel,
+interleaved back. No dilated/zero-stuffed kernel is ever materialized and no
+multiply ever hits a structural zero.
+
+This goes beyond the paper (its §5 names it as future research); it reuses the
+same phase-decomposition machinery and is validated against a naive oracle in
+tests/test_dilated.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def dilated_conv_conventional(x, kernel, *, precision=None):
+    """Baseline: lax conv with rhs_dilation=2 (kernel bed-of-nails)."""
+    return lax.conv_general_dilated(
+        x, kernel, window_strides=(1, 1), padding="VALID",
+        rhs_dilation=(2, 2), dimension_numbers=_DN, precision=precision,
+    )
+
+
+def dilated_conv_segregated(x, kernel, *, precision=None):
+    """Input-phase segregated dilated conv (dilation 2, VALID)."""
+    n = kernel.shape[0]
+    b, N, _, cin = x.shape
+    m = N - 2 * (n - 1)  # VALID output extent with dilation 2
+    if m <= 0:
+        raise ValueError(f"input {N} too small for kernel {n} with dilation 2")
+    out = jnp.zeros((b, m, m, kernel.shape[3]), jnp.result_type(x, kernel))
+    for r in (0, 1):
+        for s in (0, 1):
+            rows = (m - r + 1) // 2
+            cols = (m - s + 1) // 2
+            if rows <= 0 or cols <= 0:
+                continue
+            ph = x[:, r::2, s::2, :][:, : rows + n - 1, : cols + n - 1, :]
+            y = lax.conv_general_dilated(
+                ph, kernel, window_strides=(1, 1), padding="VALID",
+                dimension_numbers=_DN, precision=precision,
+            )
+            out = out.at[:, r::2, s::2, :].set(y[:, :rows, :cols, :])
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("method", "precision"))
+def dilated_conv2d(x, kernel, *, method: str = "segregated", precision=None):
+    fn = {
+        "conventional": dilated_conv_conventional,
+        "segregated": dilated_conv_segregated,
+    }[method]
+    return fn(x, kernel, precision=precision)

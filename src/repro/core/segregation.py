@@ -1,0 +1,228 @@
+"""Kernel segregation algebra (paper §3.1-3.2).
+
+A transpose convolution with stride 2 over an ``N x N`` input is exactly the
+interleave of four small dense convolutions ("phases") applied to the original,
+never-upsampled input. The four sub-kernels are formed from the original
+``n x n`` kernel ``K`` by taking every other row/column starting at parity
+``(r, s)``:
+
+    k00 = K[0::2, 0::2]   size ceil(n/2) x ceil(n/2)
+    k01 = K[0::2, 1::2]   size ceil(n/2) x floor(n/2)
+    k10 = K[1::2, 0::2]   size floor(n/2) x ceil(n/2)
+    k11 = K[1::2, 1::2]   size floor(n/2) x floor(n/2)
+
+Output element ``out[x, y]`` (output size ``M = 2N - n + 2P``) is produced by
+sub-kernel ``k_{r,s}`` with ``r = (x + P) % 2``, ``s = (y + P) % 2`` — the
+paper's runtime "unified" selection, including the odd-padding sub-kernel-order
+swap (paper §3.4).
+
+Everything here is shape algebra + pure jnp; no lax.conv. It is the ground
+truth the convolution-based and Pallas implementations are tested against.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class SubKernels(NamedTuple):
+    """The four segregated sub-kernels. Layout matches the source kernel:
+
+    2-D kernels  -> each entry is (R, C)
+    4-D kernels  -> each entry is (R, C, Cin, Cout)   (HWIO)
+    """
+
+    k00: jnp.ndarray
+    k01: jnp.ndarray
+    k10: jnp.ndarray
+    k11: jnp.ndarray
+
+    def by_parity(self, r: int, s: int) -> jnp.ndarray:
+        return (self.k00, self.k01, self.k10, self.k11)[2 * r + s]
+
+
+def segregate_kernel(kernel: jnp.ndarray) -> SubKernels:
+    """Split an ``n x n`` (leading two dims) kernel into four sub-kernels."""
+    if kernel.ndim < 2:
+        raise ValueError(f"kernel must have >=2 dims, got {kernel.shape}")
+    return SubKernels(
+        k00=kernel[0::2, 0::2],
+        k01=kernel[0::2, 1::2],
+        k10=kernel[1::2, 0::2],
+        k11=kernel[1::2, 1::2],
+    )
+
+
+def merge_subkernels(subs: SubKernels, n: int) -> jnp.ndarray:
+    """Inverse of :func:`segregate_kernel` (used by tests / checkpoint import)."""
+    trailing = subs.k00.shape[2:]
+    out = jnp.zeros((n, n) + trailing, dtype=subs.k00.dtype)
+    out = out.at[0::2, 0::2].set(subs.k00)
+    out = out.at[0::2, 1::2].set(subs.k01)
+    out = out.at[1::2, 0::2].set(subs.k10)
+    out = out.at[1::2, 1::2].set(subs.k11)
+    return out
+
+
+def stack_subkernels(kernel: jnp.ndarray) -> jnp.ndarray:
+    """Zero-pad the four sub-kernels to the common ``ceil(n/2)`` shape and stack.
+
+    Returns ``(4, R, R, ...)`` with ``R = ceil(n/2)``. Padding is appended on
+    the *high* side of the row/col axes, which pairs with a one-row/col high
+    side halo pad of the input (see the Pallas kernel). For even ``n`` all four
+    sub-kernels already share a shape and no zero padding is introduced — the
+    GAN workloads in the paper (all 4x4 kernels) therefore run with zero
+    arithmetic waste in the unified stacked form.
+    """
+    n = kernel.shape[0]
+    R = ceil_half(n)
+    subs = segregate_kernel(kernel)
+    padded = []
+    for k in subs:
+        pad = [(0, R - k.shape[0]), (0, R - k.shape[1])] + [(0, 0)] * (kernel.ndim - 2)
+        padded.append(jnp.pad(k, pad))
+    return jnp.stack(padded)
+
+
+def ceil_half(n: int) -> int:
+    return (n + 1) // 2
+
+
+def floor_half(n: int) -> int:
+    return n // 2
+
+
+def subkernel_shape(n: int, r: int, s: int) -> tuple[int, int]:
+    """Spatial shape of sub-kernel ``k_{r,s}`` for an ``n x n`` kernel."""
+    rows = ceil_half(n) if r == 0 else floor_half(n)
+    cols = ceil_half(n) if s == 0 else floor_half(n)
+    return rows, cols
+
+
+def output_size(n_in: int, n_kernel: int, padding: int = 0) -> int:
+    """Output extent of the paper's transpose convolution: ``2N - n + 2P``."""
+    m = 2 * n_in - n_kernel + 2 * padding
+    if m <= 0:
+        raise ValueError(
+            f"non-positive output size {m} for N={n_in}, n={n_kernel}, P={padding}"
+        )
+    return m
+
+
+def phase_extent(m_out: int, parity: int) -> int:
+    """Number of output rows (or cols) owned by parity ``parity`` in [0, 2)."""
+    return (m_out - parity + 1) // 2
+
+
+def phase_params(x_parity: int, padding: int) -> int:
+    """Sub-kernel row (or col) parity used for output parity ``x_parity``.
+
+    ``r = (x + P) mod 2`` — for odd padding the sub-kernel roles swap
+    (``k00 <-> k11``, ``k01 <-> k10``), paper §3.4.
+    """
+    return (x_parity + padding) % 2
+
+
+class PhasePlan(NamedTuple):
+    """Static slicing plan for one phase of the segregated transpose conv.
+
+    For output elements with row parity ``pr`` and col parity ``pc``::
+
+      out[pr::2, pc::2][t, u] =
+          sum_{p,q} Ipad[row0 + t + p, col0 + u + q] * k[kr, kc][p, q]
+
+    where ``Ipad`` is the input padded by ``pad_lo``/``pad_hi`` with zeros.
+    """
+
+    pr: int          # output row parity
+    pc: int          # output col parity
+    kr: int          # sub-kernel row parity (after padding swap)
+    kc: int          # sub-kernel col parity
+    rows: int        # output rows this phase owns
+    cols: int        # output cols this phase owns
+    row0: int        # first input row (in padded coords)
+    col0: int        # first input col (in padded coords)
+
+
+def plan_phases(
+    n_in: int, n_kernel: int, padding: int = 0
+) -> tuple[list[PhasePlan], int, int]:
+    """Build the four phase plans plus the (lo, hi) zero-padding of the input.
+
+    Derivation: out[x, y] = sum_{u,v} Upad[x+u, y+v] K[u, v] with
+    ``Upad[a, b] = U[a-P, b-P]`` and ``U[2i, 2j] = I[i, j]``. The nonzero terms
+    have ``u = 2p + kr`` with ``kr = (x + P) % 2`` and input index
+    ``i = p + ceil((x - P) / 2)``. With ``x = 2t + pr``:
+
+        i = p + t + ceil((pr - P) / 2)
+
+    so phase ``(pr, pc)`` is a valid correlation of the input (shifted by a
+    *constant* offset) with sub-kernel ``k_{kr,kc}``. The constant offset
+    ``ceil((pr - P)/2)`` is negative for P > 0 — absorbed into ``pad_lo``.
+    """
+    m = output_size(n_in, n_kernel, padding)
+    pad_lo = -math.ceil((0 - padding) / 2)  # = floor(P/2) rows of zeros, low side
+    plans = []
+    max_hi = 0
+    for pr in (0, 1):
+        for pc in (0, 1):
+            kr = phase_params(pr, padding)
+            kc = phase_params(pc, padding)
+            R, C = subkernel_shape(n_kernel, kr, kc)
+            rows = phase_extent(m, pr)
+            cols = phase_extent(m, pc)
+            row0 = math.ceil((pr - padding) / 2) + pad_lo
+            col0 = math.ceil((pc - padding) / 2) + pad_lo
+            # highest padded-input row touched:
+            hi_r = row0 + (rows - 1) + (R - 1)
+            hi_c = col0 + (cols - 1) + (C - 1)
+            max_hi = max(max_hi, hi_r, hi_c)
+            plans.append(PhasePlan(pr, pc, kr, kc, rows, cols, row0, col0))
+    pad_hi = max(0, max_hi - (n_in + pad_lo - 1))
+    return plans, pad_lo, pad_hi
+
+
+def flop_count(
+    n_in: int, n_kernel: int, cin: int, cout: int, padding: int = 0,
+    *, method: str = "segregated",
+) -> int:
+    """Multiply count per image. Used by benchmarks and the roofline model.
+
+    conventional: every output element does n*n*cin MACs over the upsampled map.
+    segregated  : each output element does |k_{r,s}| * cin MACs.
+    """
+    m = output_size(n_in, n_kernel, padding)
+    if method == "conventional":
+        return m * m * n_kernel * n_kernel * cin * cout
+    total = 0
+    for pr in (0, 1):
+        for pc in (0, 1):
+            kr = phase_params(pr, padding)
+            kc = phase_params(pc, padding)
+            R, C = subkernel_shape(n_kernel, kr, kc)
+            total += phase_extent(m, pr) * phase_extent(m, pc) * R * C * cin * cout
+    return total
+
+
+def memory_savings_bytes(
+    n_in: int, cin: int, dtype_bytes: int = 4, padding: int = 0,
+    n_kernel: int = 0, *, mode: str = "diff",
+) -> int:
+    """Bytes saved by never materializing the bed-of-nails upsampled map.
+
+    The conventional path materializes a ``(2N-1+2P) x (2N-1+2P) x Cin``
+    buffer; the segregated path reads the input (padded by floor(P/2))
+    directly.
+
+    mode="diff"   (paper Tables 2-3 convention, e.g. 1.8279 MB for
+                   224x224x3 @ P=2): buffer minus the padded input.
+    mode="buffer" (paper Table 4 convention, e.g. 991,232 B for the
+                   4x4x2048 EB-GAN layer): the whole upsampled buffer.
+    """
+    up = 2 * n_in - 1 + 2 * padding
+    if mode == "buffer":
+        return up * up * cin * dtype_bytes
+    seg = n_in + 2 * (padding // 2)
+    return (up * up - seg * seg) * cin * dtype_bytes

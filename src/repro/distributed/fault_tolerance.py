@@ -1,0 +1,59 @@
+"""Fault tolerance & elasticity design for 1000+ node deployments.
+
+This module documents (and provides the host-side helpers for) the failure
+model the framework is built around. The pieces that live elsewhere:
+
+  checkpoint/restart   train/checkpoint.py — step-atomic npz, resume-by-step
+  stateless data       data/pipeline.py — batch = f(seed, step, host)
+  NaN/anomaly guard    train/trainer.py — skip-and-count bad steps
+  gradient compression optim/compression.py — int8 cross-pod all-reduce
+
+Failure model and responses
+---------------------------
+
+1. **Chip/host crash (hard failure).** JAX multi-controller jobs fail
+   as a unit; the scheduler relaunches the same binary. Because data is a
+   pure function of step and the checkpoint is step-atomic, the relaunched
+   job resumes bit-exact from the last checkpoint. Mean lost work is
+   ckpt_every/2 steps; at 1000 nodes pick ckpt_every so that
+   (MTBF_cluster / step_time) >> ckpt_every.
+
+2. **Elastic re-scale (lose/gain a pod).** The production mesh is
+   (pod, data, model). Losing a pod halves global batch but changes no
+   parameter sharding (the pod axis only carries data parallelism), so:
+   re-mesh with pod=1, reload the same checkpoint (host-side npz arrays are
+   mesh-agnostic), continue with the `elastic_batch_schedule` below to keep
+   the effective batch via gradient accumulation.
+
+3. **Stragglers.** Two mitigations: (a) deterministic shard ownership
+   lets any fast worker recompute a slow peer's shard for the *next* step
+   (work stealing at the data layer — no tensor state moves); (b) the
+   launcher stamps a deadline per step; hosts that miss it are reported to
+   the scheduler for replacement rather than stalling the collective.
+
+4. **Silent data corruption.** The anomaly guard skips non-finite steps;
+   paranoid mode (`Trainer(..., ckpt_every=k, keep_last=n)`) retains n
+   checkpoints so a corrupted-but-finite run can be rolled back.
+"""
+from __future__ import annotations
+
+import math
+
+
+def elastic_batch_schedule(global_batch: int, pods_alive: int, pods_total: int):
+    """(per-step microbatch, grad-accumulation steps) after losing pods.
+
+    Keeps the effective batch constant: microbatch shrinks with the alive
+    fraction; accumulation makes up the difference.
+    """
+    frac = pods_alive / pods_total
+    micro = max(1, int(global_batch * frac))
+    accum = math.ceil(global_batch / micro)
+    return micro, accum
+
+
+def shard_owner(step: int, shard: int, hosts: int) -> int:
+    """Deterministic rotating shard ownership: any host can compute any
+    shard, and ownership rotates so a straggler's shard lands on a
+    different host next step."""
+    return (shard + step) % hosts

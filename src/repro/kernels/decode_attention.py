@@ -1,0 +1,103 @@
+"""Flash-decode GQA attention Pallas kernel — the serving hot spot.
+
+One decoded token attends over a long KV cache: per (batch, kv-head) the
+kernel walks sequence blocks with an online-softmax accumulator in VMEM
+scratch, so the cache streams HBM->VMEM exactly once and the (G, S) score
+matrix is never materialized. This is the kernel behind the decode_32k /
+long_500k roofline floor (cache read once at HBM bandwidth); the q-side G
+(grouped query heads per KV head) rides the MXU sublane dim.
+
+Grid: (B, KV, S/BS) with the sequence axis innermost; scratch carries
+(m, l, acc) across sequence blocks; the output block is written on the last
+block. kv_len masks the cache tail (decode position + 1).
+
+Validated in interpret mode against the pure-jnp grouped-decode oracle
+(repro.models.layers._grouped_decode_attention) in tests/test_decode_kernel.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            block_s, n_blocks):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                      # (G, hd)
+    k = k_ref[0, :, 0, :]                # (BS, hd)
+    v = v_ref[0, :, 0, :]                # (BS, hd)
+    kv_len = len_ref[0, 0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, BS)
+    s = s * (q.shape[-1] ** -0.5)
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, dimension=1
+    )
+    s = jnp.where(pos < kv_len, s, NEG_INF)
+
+    m_prev = m_scr[...]                  # (G, 1)
+    m_new = jnp.maximum(m_prev[:, 0], s.max(axis=1))[:, None]
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)               # (G, BS)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p, v.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(s_idx == n_blocks - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_pallas(q, k, v, kv_len, *, block_s: int = 512,
+                            interpret: bool | None = None):
+    """q: (B, KV, G, hd); k, v: (B, S, KV, hd); kv_len: (B,) int32.
+
+    Returns (B, KV, G, hd) fp32 attention outputs for one decoded token.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, kv_heads, g, hd = q.shape
+    s_len = k.shape[1]
+    bs = min(block_s, s_len)
+    assert s_len % bs == 0, (s_len, bs)
+    n_blocks = s_len // bs
+
+    grid = (b, kv_heads, n_blocks)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_s=bs, n_blocks=n_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, h, s: (bb, 0)),           # kv_len
+            pl.BlockSpec((1, 1, g, hd), lambda bb, h, s: (bb, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda bb, h, s: (bb, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda bb, h, s: (bb, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bb, h, s: (bb, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv_heads, g, hd), jnp.float32),
+        scratch_shapes=[
+            # (m, l, acc) online-softmax carries, persisted in VMEM across
+            # the (innermost) sequence-block grid axis
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.reshape(b, 1).astype(jnp.int32), q, k, v)

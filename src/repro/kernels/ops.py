@@ -1,0 +1,33 @@
+"""Jit'd, differentiable wrappers around the Pallas transpose-conv kernel.
+
+The Pallas kernel implements the forward; the VJP is defined through the
+mathematically-identical lax implementation (`transpose_conv_unified`), so the
+op is trainable end-to-end (used by the GAN generators in models/gan.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.transpose_conv2d import transpose_conv2d_pallas as _pallas_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def transpose_conv2d_pallas(x, kernel, padding: int = 0):
+    return _pallas_fwd(x, kernel, padding)
+
+
+def _fwd(x, kernel, padding):
+    return _pallas_fwd(x, kernel, padding), (x, kernel)
+
+
+def _bwd(padding, res, g):
+    from repro.core.transpose_conv import transpose_conv_unified
+
+    x, kernel = res
+    _, vjp = jax.vjp(lambda a, b: transpose_conv_unified(a, b, padding), x, kernel)
+    return vjp(g)
+
+
+transpose_conv2d_pallas.defvjp(_fwd, _bwd)

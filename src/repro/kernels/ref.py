@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the transpose convolution (no lax.conv, no Pallas).
+
+Two independent formulations of the paper's operator:
+
+* :func:`conventional_ref` — Algorithm 1 verbatim: bed-of-nails upsample,
+  zero-pad, then a literal sliding-window correlation.
+* :func:`unified_segregated_ref` — Algorithm 2 / Eqs. (1)-(4): per-output
+  parity sub-kernel selection on the never-upsampled input.
+
+Both accept NHWC inputs ``(B, N, N, Cin)`` and HWIO kernels ``(n, n, Cin,
+Cout)`` (2-D single-channel arrays are promoted). They are deliberately slow
+and simple; every faster implementation (lax-conv based, Pallas) is tested
+against them with assert_allclose.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import segregation as seg
+
+
+def _promote(x: jnp.ndarray, kernel: jnp.ndarray):
+    squeeze = False
+    if x.ndim == 2:
+        x = x[None, :, :, None]
+        squeeze = True
+    if kernel.ndim == 2:
+        kernel = kernel[:, :, None, None]
+    if x.ndim != 4 or kernel.ndim != 4:
+        raise ValueError(f"bad ranks: x{x.shape} kernel{kernel.shape}")
+    return x, kernel, squeeze
+
+
+def bed_of_nails(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, N, N, C) -> (B, 2N-1, 2N-1, C) with x at even coordinates."""
+    b, n, _, c = x.shape
+    up = jnp.zeros((b, 2 * n - 1, 2 * n - 1, c), dtype=x.dtype)
+    return up.at[:, 0::2, 0::2, :].set(x)
+
+
+def conventional_ref(
+    x: jnp.ndarray, kernel: jnp.ndarray, padding: int = 0
+) -> jnp.ndarray:
+    """Paper Algorithm 1: upsample, pad, sliding-window correlate."""
+    x, kernel, squeeze = _promote(x, kernel)
+    n_kernel = kernel.shape[0]
+    up = bed_of_nails(x)
+    if padding:
+        up = jnp.pad(up, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    m = seg.output_size(x.shape[1], n_kernel, padding)
+    # window sum via shift-and-accumulate (still "naive": one term per tap)
+    out = jnp.zeros((x.shape[0], m, m, kernel.shape[3]), dtype=jnp.result_type(x, kernel))
+    for u in range(n_kernel):
+        for v in range(n_kernel):
+            window = up[:, u : u + m, v : v + m, :]
+            out = out + jnp.einsum("bhwi,io->bhwo", window, kernel[u, v])
+    return out[0, :, :, 0] if squeeze else out
+
+
+def unified_segregated_ref(
+    x: jnp.ndarray, kernel: jnp.ndarray, padding: int = 0
+) -> jnp.ndarray:
+    """Paper Algorithm 2: runtime sub-kernel selection, exact phase extents."""
+    x, kernel, squeeze = _promote(x, kernel)
+    n_kernel = kernel.shape[0]
+    subs = seg.segregate_kernel(kernel)
+    plans, pad_lo, pad_hi = seg.plan_phases(x.shape[1], n_kernel, padding)
+    xp = jnp.pad(x, ((0, 0), (pad_lo, pad_hi), (pad_lo, pad_hi), (0, 0)))
+    m = seg.output_size(x.shape[1], n_kernel, padding)
+    out = jnp.zeros((x.shape[0], m, m, kernel.shape[3]), dtype=jnp.result_type(x, kernel))
+    for plan in plans:
+        k = subs.by_parity(plan.kr, plan.kc)
+        acc = jnp.zeros(
+            (x.shape[0], plan.rows, plan.cols, kernel.shape[3]),
+            dtype=out.dtype,
+        )
+        for p in range(k.shape[0]):
+            for q in range(k.shape[1]):
+                window = xp[
+                    :,
+                    plan.row0 + p : plan.row0 + p + plan.rows,
+                    plan.col0 + q : plan.col0 + q + plan.cols,
+                    :,
+                ]
+                acc = acc + jnp.einsum("bhwi,io->bhwo", window, k[p, q])
+        out = out.at[:, plan.pr :: 2, plan.pc :: 2, :].set(acc)
+    return out[0, :, :, 0] if squeeze else out

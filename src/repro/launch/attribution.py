@@ -1,0 +1,89 @@
+"""Collective/FLOP attribution: ranks every collective in a compiled cell by
+trip-count-weighted wire bytes, with jax op_name provenance. This is the
+profiler the §Perf hillclimb reads.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.attribution --arch llama3-8b \
+      --shape decode_32k [--multi-pod] [--top 15]
+(must run in the dry-run process: sets the 512-device flag first)
+"""
+import os
+
+if "--worker" in os.sys.argv or __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+import argparse
+import re
+
+from repro.launch import hlo_analysis as H
+
+
+def collective_items(hlo_text: str):
+    """[(wire_bytes*mult, op, result_type, mult, op_name), ...] desc."""
+    comps = H.parse_module(hlo_text)
+    entry = comps.get("__entry__")
+    items = []
+
+    def walk(name, mult, seen):
+        comp = comps.get(name.lstrip("%"))
+        if comp is None or name in seen:
+            return
+        for ins in comp.instrs:
+            base = ins.op.replace("-start", "").replace("-done", "")
+            if base in H.COLLECTIVES and not ins.op.endswith("-done"):
+                b = H._type_bytes(ins.type_str)
+                if not b:
+                    continue
+                mm = re.search(r'op_name="([^"]+)"', ins.attrs)
+                items.append((
+                    b * mult * (2 if base == "all-reduce" else 1),
+                    base, ins.type_str[:48], mult,
+                    (mm.group(1) if mm else "?"),
+                ))
+            elif ins.op == "while":
+                tm = H._TRIP_RE.search(ins.attrs)
+                trips = int(tm.group(1)) if tm else 1
+                bm = H._call_attr_re.search(ins.attrs)
+                if bm:
+                    walk(bm.group(1), mult * trips, seen)
+            elif ins.op in ("call", "fusion", "async-start", "custom-call"):
+                m = H._call_attr_re.search(ins.attrs) or \
+                    H._calls_attr_re.search(ins.attrs)
+                if m:
+                    walk(m.group(1), mult, seen)
+    walk(entry.name, 1, set())
+    items.sort(reverse=True)
+    return items
+
+
+def report(hlo_text: str, top=15):
+    items = collective_items(hlo_text)
+    total = sum(i[0] for i in items)
+    lines = [f"total collective wire bytes/chip: {total / 1e9:.2f} GB "
+             f"({len(items)} sites)"]
+    for b, op, shape, mult, name in items[:top]:
+        lines.append(
+            f"{b / 1e9:9.2f}GB x{mult:5d} {op:18s} {shape:50s} {name[-90:]}"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import compile_cell
+
+    compiled, _ = compile_cell(args.arch, args.shape, multi_pod=args.multi_pod)
+    print(report(compiled.as_text(), args.top))
+
+
+if __name__ == "__main__":
+    main()

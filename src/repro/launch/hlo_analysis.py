@@ -1,0 +1,351 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body **once**; our
+layer stacks and chunked attention/SSM scans are whiles, so FLOPs, bytes and
+collective counts would be undercounted by the trip count (up to ~4096x for
+an sLSTM sequence scan). This module walks the post-optimization HLO text,
+resolves every while's trip count from its condition computation, and
+recursively accumulates:
+
+  * dot / convolution FLOPs (from operand shapes + contraction dims),
+  * an HBM-traffic model (per top-level instruction: result bytes + operand
+    bytes; fusion internals are free — matching XLA's own bytes-accessed
+    semantics),
+  * per-collective wire bytes (all-reduce counted 2x for ring RS+AG).
+
+This is the profile the §Perf hillclimb reads (no real TPU available):
+``per_collective`` + ``while_trips`` expose redundant collectives and
+scan-vs-unroll trade-offs directly.
+
+Validated against XLA cost_analysis on unrolled (while-free) programs in
+tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _parse_instr_line(line: str):
+    """Parse '  [ROOT] %name = TYPE opcode(OPERANDS), ATTRS' with proper
+    bracket matching (metadata attrs contain nested parens)."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    eq = s.find(" = ")
+    if eq < 0 or not s.startswith("%"):
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3 :]
+    # type: tuple '(...)' or scalar token
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        type_str = rest[: i + 1]
+        rest = rest[i + 1 :].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str = rest[:sp]
+        rest = rest[sp + 1 :]
+    par = rest.find("(")
+    if par < 0:
+        return None
+    op = rest[:par]
+    depth = 0
+    for i in range(par, len(rest)):
+        depth += rest[i] == "("
+        depth -= rest[i] == ")"
+        if depth == 0:
+            break
+    operands = rest[par + 1 : i]
+    attrs = rest[i + 1 :]
+    return name, type_str, op, operands, attrs
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _type_dims(type_str):
+    """All (dtype, dims) arrays in a (possibly tuple) type string."""
+    return [
+        (dt, [int(d) for d in dims.split(",") if d])
+        for dt, dims in _SHAPE_RE.findall(type_str)
+    ]
+
+
+def _type_bytes(type_str):
+    tot = 0
+    for dt, dims in _type_dims(type_str):
+        tot += _DTYPE_BYTES.get(dt, 4) * math.prod(dims)
+    return tot
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: list
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)  # %name -> type_str
+
+
+def _split_operands(s):
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return [o for o in out if o]
+
+
+def parse_module(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        parsed = _parse_instr_line(line)
+        if parsed:
+            name, type_str, op, operands, attrs = parsed
+            ins = Instr(name, type_str, op, _split_operands(operands), attrs)
+            cur.instrs.append(ins)
+            cur.shapes[name] = type_str
+    comps["__entry__"] = comps[entry] if entry else None
+    return comps
+
+
+def _operand_shape(comp, ref):
+    ref = ref.lstrip("%")
+    # inline-typed operand like "f32[4,5]{1,0} %param.1" or bare "%x"
+    parts = ref.split()
+    if len(parts) > 1:
+        return parts[0]
+    return comp.shapes.get(ref.split("{")[0], "")
+
+
+def _dot_flops(comp, ins):
+    res = _type_dims(ins.type_str)
+    out_elems = sum(math.prod(d) for _, d in res)
+    lhs_type = _operand_shape(comp, ins.operands[0])
+    lhs = _type_dims(lhs_type)
+    if not lhs:
+        return 0
+    _, lhs_dims = lhs[0]
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
+    k = math.prod(lhs_dims[i] for i in cdims) if cdims else 1
+    return 2 * out_elems * k
+
+
+def _conv_flops(comp, ins):
+    res = _type_dims(ins.type_str)
+    out_elems = sum(math.prod(d) for _, d in res)
+    rhs_type = _operand_shape(comp, ins.operands[1])
+    rhs = _type_dims(rhs_type)
+    if not rhs:
+        return 0
+    _, rhs_dims = rhs[0]
+    m = re.search(r"dim_labels=\w+_(\w+)->", ins.attrs)
+    rhs_elems = math.prod(rhs_dims)
+    if m:
+        labels = m.group(1)
+        o_pos = labels.index("o")
+        out_feat = rhs_dims[o_pos]
+    else:
+        out_feat = rhs_dims[-1]
+    gm = re.search(r"feature_group_count=(\d+)", ins.attrs)
+    groups = int(gm.group(1)) if gm else 1
+    return 2 * out_elems * (rhs_elems // max(out_feat, 1)) // max(groups, 1)
+
+
+def _trip_count(comps, cond_name):
+    cond = comps.get(cond_name.lstrip("%"))
+    if cond is None:
+        return 1
+    consts = [
+        int(m.group(1))
+        for ins in cond.instrs
+        if ins.op == "constant" and ins.type_str.startswith("s32")
+        and (m := re.match(r"(\d+)", ins.operands[0] if ins.operands else ""))
+    ]
+    return max(consts) if consts else 1
+
+
+_call_attr_re = re.compile(r"(?:to_apply|body)=%?([\w\.\-]+)")
+_cond_attr_re = re.compile(r"condition=%?([\w\.\-]+)")
+_calls_attr_re = re.compile(r"calls=%?([\w\.\-]+)")
+_branches_re = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def analyze(text: str) -> dict:
+    """Trip-count-aware totals for the whole module."""
+    comps = parse_module(text)
+    entry = comps.get("__entry__")
+    memo: dict[str, dict] = {}
+
+    def comp_cost(name):
+        name = name.lstrip("%")
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        zero = {
+            "flops": 0.0, "bytes": 0.0,
+            **{c: 0.0 for c in COLLECTIVES}, "coll_count": 0.0,
+        }
+        if comp is None:
+            return zero
+        memo[name] = zero  # break cycles
+        tot = dict(zero)
+        for ins in comp.instrs:
+            opb = ins.op
+            base = opb.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES and not opb.endswith("-done"):
+                b = _type_bytes(ins.type_str)
+                factor = 2 if base == "all-reduce" else 1
+                tot[base] += b * factor
+                tot["coll_count"] += 1
+                tot["bytes"] += _type_bytes(ins.type_str)
+            elif opb == "dot":
+                tot["flops"] += _dot_flops(comp, ins)
+                tot["bytes"] += _type_bytes(ins.type_str) + sum(
+                    _type_bytes(_operand_shape(comp, o)) for o in ins.operands
+                )
+            elif opb == "convolution":
+                tot["flops"] += _conv_flops(comp, ins)
+                tot["bytes"] += _type_bytes(ins.type_str) + sum(
+                    _type_bytes(_operand_shape(comp, o)) for o in ins.operands
+                )
+            elif opb == "while":
+                body = _call_attr_re.search(ins.attrs)
+                tm = _TRIP_RE.search(ins.attrs)
+                if tm:  # XLA-annotated known trip count (preferred)
+                    trips = int(tm.group(1))
+                else:
+                    cond = _cond_attr_re.search(ins.attrs)
+                    trips = _trip_count(comps, cond.group(1)) if cond else 1
+                if body:
+                    sub = comp_cost(body.group(1))
+                    for k in tot:
+                        tot[k] += trips * sub[k]
+            elif opb in ("call", "custom-call", "async-start"):
+                m = _call_attr_re.search(ins.attrs) or _calls_attr_re.search(
+                    ins.attrs
+                )
+                if m:
+                    sub = comp_cost(m.group(1))
+                    for k in tot:
+                        tot[k] += sub[k]
+            elif opb == "conditional":
+                m = _branches_re.search(ins.attrs)
+                if m:  # worst-case branch
+                    subs = [
+                        comp_cost(b.strip().lstrip("%"))
+                        for b in m.group(1).split(",")
+                    ]
+                    worst = max(subs, key=lambda s: s["flops"] + s["bytes"])
+                    for k in tot:
+                        tot[k] += worst[k]
+            elif opb == "fusion":
+                m = _calls_attr_re.search(ins.attrs)
+                if m:
+                    sub = comp_cost(m.group(1))
+                    # fusions: internal dots/convs count; internal bytes don't
+                    tot["flops"] += sub["flops"]
+                # HBM traffic: fusion result + its operands
+                tot["bytes"] += _type_bytes(ins.type_str) + sum(
+                    _type_bytes(_operand_shape(comp, o)) for o in ins.operands
+                )
+            elif opb not in _SKIP_BYTES_OPS:
+                tot["bytes"] += _type_bytes(ins.type_str) + sum(
+                    _type_bytes(_operand_shape(comp, o)) for o in ins.operands
+                )
+        memo[name] = tot
+        return tot
+
+    if entry is None:
+        return {"flops": 0, "bytes": 0, "collectives": {}}
+    tot = comp_cost(entry.name)
+    coll_total = sum(tot[c] for c in COLLECTIVES)
+    return {
+        "flops": tot["flops"],
+        "bytes": tot["bytes"],
+        "collectives": {
+            **{c: tot[c] for c in COLLECTIVES},
+            "count": tot["coll_count"],
+            "total": coll_total,
+        },
+    }
+
+
+def while_summary(text: str) -> list:
+    """Per-while trip counts + body collective/flop totals (profiling aid)."""
+    comps = parse_module(text)
+    out = []
+    for key, comp in comps.items():
+        if key == "__entry__" or not isinstance(comp, Computation):
+            continue
+        for ins in comp.instrs:
+            if ins.op == "while":
+                body = _call_attr_re.search(ins.attrs)
+                tm = _TRIP_RE.search(ins.attrs)
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    cond = _cond_attr_re.search(ins.attrs)
+                    trips = _trip_count(comps, cond.group(1)) if cond else 1
+                out.append({
+                    "while": ins.name, "body": body.group(1) if body else "?",
+                    "trips": trips,
+                })
+    return out

@@ -1,0 +1,133 @@
+"""Roofline derivation from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+``cost_analysis()`` of the compiled (SPMD-partitioned) module reports
+*per-device* HLO FLOPs / bytes; collective bytes are likewise summed from the
+per-partition HLO, so every term below is per-chip seconds directly:
+
+    compute    = HLO_FLOPs_per_chip   / 197e12
+    memory     = HLO_bytes_per_chip   / 819e9
+    collective = coll_bytes_per_chip  / 50e9
+
+(equivalent to the global formulation FLOPs_total / (chips x peak)).
+All-reduce wire traffic is counted 2x its tensor size (ring: reduce-scatter +
+all-gather); other collectives 1x their per-device result size.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-chip wire bytes by collective type, parsed from partitioned HLO."""
+    out = {
+        "all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+        "all-to-all": 0, "collective-permute": 0, "count": 0,
+    }
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        # avoid double counting async -start/-done pairs: -done has no shape
+        # payload of its own in most dumps, but guard anyway
+        b = _shape_bytes(type_str)
+        if b == 0:
+            continue
+        factor = 2 if op == "all-reduce" else 1
+        key = (m.start(), op)
+        if key in seen_done:
+            continue
+        seen_done.add(key)
+        out[op] += b * factor
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in (
+        "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute",
+    ))
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D (train) / 2*N_active*D (inference) useful-FLOP floor."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n * tokens
+
+
+def roofline_report(report: dict, cfg, shape) -> dict:
+    """Three-term roofline. The memory term is bracketed:
+
+    memory_lb — fusion-perfect traffic (program arguments read + outputs
+        written + temps written&read once, from memory_analysis); what a TPU
+        with ideal fusion/flash kernels would move through HBM.
+    memory_ub — op-level bytes-accessed (walker, XLA cost-analysis
+        semantics: every non-fused op's operands+result); assumes nothing
+        stays resident. Dominance/roofline-fraction use the lb (ub is the
+        fusion-headroom diagnostic).
+    """
+    chips = report["chips"]
+    flops = report.get("flops") or 0.0
+    byts = report.get("bytes_accessed") or 0.0
+    coll = report.get("collectives", {}).get("total", 0)
+    mem = report.get("memory", {})
+    mem_lb_bytes = (
+        mem.get("argument_size_in_bytes", 0)
+        + mem.get("output_size_in_bytes", 0)
+        + 2 * mem.get("temp_size_in_bytes", 0)
+    )
+    compute_t = flops / PEAK_FLOPS
+    memory_lb_t = mem_lb_bytes / HBM_BW
+    memory_ub_t = byts / HBM_BW
+    coll_t = coll / LINK_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_lb_t,
+             "collective_s": coll_t}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape) / chips
+    step_t = max(terms.values())
+    return {
+        **{k: float(f"{v:.6g}") for k, v in terms.items()},
+        "memory_ub_s": float(f"{memory_ub_t:.6g}"),
+        "dominant": dominant,
+        "model_flops_per_chip": float(f"{mf:.6g}"),
+        "useful_flop_ratio": float(f"{mf / flops:.4g}") if flops else None,
+        "roofline_fraction": float(
+            f"{(mf / PEAK_FLOPS) / step_t:.4g}"
+        ) if step_t else None,
+        "step_time_lower_bound_s": float(f"{step_t:.6g}"),
+    }

@@ -1,0 +1,234 @@
+"""Encoder-decoder LM (whisper-large-v3 backbone).
+
+Per the assignment the audio conv frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings (B, n_frames, d_model) directly into the encoder
+(in the real model these come from two strided Conv1ds over the log-mel
+spectrogram — which is exactly where the paper's segregation technique would
+apply in reverse/dilated form, see DESIGN.md §4).
+
+Encoder: bidirectional attention + sinusoidal positions. Decoder: causal self
+attention (KV-cached for decode) + cross attention over the encoder output
+(cross K/V computed once at prefill and carried in the cache) + SwiGLU FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import BATCH, MODEL, constrain, shard_batch
+from repro.models import layers as L
+
+
+def _sinusoid(n, d):
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / (10_000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class EncDecLM:
+    MAX_DEC_SEQ = 32_768  # learned decoder position table extent
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params
+
+    def init(self, key):
+        cfg = self.cfg
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        keys = jax.random.split(key, 6)
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "mixer_norm": L.rmsnorm_init(cfg.d_model),
+                "mixer": {"attn": L.attn_init(k1, cfg)},
+                "ffn_norm": L.rmsnorm_init(cfg.d_model),
+                "ffn": L.mlp_init(k2, cfg),
+            }
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {
+                "self_norm": L.rmsnorm_init(cfg.d_model),
+                "self": {"attn": L.attn_init(k1, cfg)},
+                "cross_norm": L.rmsnorm_init(cfg.d_model),
+                "cross": {"attn": L.attn_init(k2, cfg)},
+                "ffn_norm": L.rmsnorm_init(cfg.d_model),
+                "ffn": L.mlp_init(k3, cfg),
+            }
+
+        enc_keys = jax.random.split(keys[0], cfg.encoder_layers)
+        dec_keys = jax.random.split(keys[1], cfg.n_layers)
+        params = {
+            "encoder": {
+                "layers": jax.tree_util.tree_map(
+                    lambda *a: jnp.stack(a), *[enc_layer(k) for k in enc_keys]
+                ),
+                "final_norm": L.rmsnorm_init(cfg.d_model),
+            },
+            "decoder": {
+                "embed": {
+                    "w": (jax.random.normal(keys[2], (cfg.vocab_size, cfg.d_model))
+                          * 0.02).astype(dt)
+                },
+                "pos_embed": {
+                    "w": (jax.random.normal(keys[3], (self.MAX_DEC_SEQ, cfg.d_model))
+                          * 0.02).astype(dt)
+                },
+                "layers": jax.tree_util.tree_map(
+                    lambda *a: jnp.stack(a), *[dec_layer(k) for k in dec_keys]
+                ),
+                "final_norm": L.rmsnorm_init(cfg.d_model),
+            },
+        }
+        return params
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    # ------------------------------------------------------------ encoder
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        h = frames + _sinusoid(frames.shape[1], cfg.d_model).astype(frames.dtype)
+        h = shard_batch(h)
+        positions = jnp.arange(h.shape[1])
+
+        def body(h, lp):
+            h = constrain(h, BATCH, None, None)
+            hn = constrain(L.rmsnorm(lp["mixer_norm"], h), BATCH, None, None)
+            out, _ = L.attention(
+                lp["mixer"]["attn"], cfg, hn, positions=positions, causal=False
+            )
+            h = constrain(h + out, BATCH, None, None)
+            hn = constrain(L.rmsnorm(lp["ffn_norm"], h), BATCH, None, None)
+            return constrain(h + L.mlp(lp["ffn"], hn), BATCH, None, None), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, _ = lax.scan(lambda c, x: body(c, x), h, params["encoder"]["layers"])
+        return L.rmsnorm(params["encoder"]["final_norm"], h)
+
+    # ------------------------------------------------------------ decoder
+
+    def _dec_embed(self, params, tokens, pos0):
+        dec = params["decoder"]
+        h = dec["embed"]["w"][tokens]
+        if isinstance(pos0, int):
+            pe = dec["pos_embed"]["w"][pos0 : pos0 + tokens.shape[1]]
+        else:  # per-sequence decode positions (B,)
+            pe = dec["pos_embed"]["w"][pos0][:, None, :]
+        return shard_batch(h + pe)
+
+    def _decoder_stack(self, params, h, h_enc, *, positions, mode,
+                       caches=None, cache_pos=None):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h = carry
+            lp, cache_in = xs
+            h = constrain(h, BATCH, None, None)
+            hn = constrain(L.rmsnorm(lp["self_norm"], h), BATCH, None, None)
+            self_cache = cache_in["self"] if mode == "decode" else None
+            out, new_self = L.attention(
+                lp["self"]["attn"], cfg, hn, positions=positions,
+                cache=self_cache, cache_pos=cache_pos,
+                prefill=(mode == "prefill"),
+            )
+            h = constrain(h + out, BATCH, None, None)
+            hn = constrain(L.rmsnorm(lp["cross_norm"], h), BATCH, None, None)
+            if mode == "decode":
+                kv = (cache_in["cross"].k, cache_in["cross"].v)
+            else:
+                B, F, _ = h_enc.shape
+                KV, hd = cfg.n_kv_heads, cfg.head_dim
+                kv = (
+                    L.dense(lp["cross"]["attn"]["wk"], h_enc).reshape(B, F, KV, hd),
+                    L.dense(lp["cross"]["attn"]["wv"], h_enc).reshape(B, F, KV, hd),
+                )
+            out, _ = L.attention(
+                lp["cross"]["attn"], cfg, hn, positions=positions,
+                causal=False, kv_override=kv,
+            )
+            h = constrain(h + out, BATCH, None, None)
+            hn = constrain(L.rmsnorm(lp["ffn_norm"], h), BATCH, None, None)
+            h = constrain(h + L.mlp(lp["ffn"], hn), BATCH, None, None)
+            new_cache = 0
+            if mode == "prefill":
+                new_cache = {"self": new_self, "cross": L.KVCache(*kv)}
+            elif mode == "decode":
+                new_cache = {"self": new_self, "cross": cache_in["cross"]}
+            return h, new_cache
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body)
+        xs_cache = caches if caches is not None else jnp.zeros(
+            (self.cfg.n_layers,)
+        )
+        h, new_caches = lax.scan(body, h, (params["decoder"]["layers"], xs_cache))
+        return L.rmsnorm(params["decoder"]["final_norm"], h), new_caches
+
+    def _logits(self, params, h):
+        w = params["decoder"]["embed"]["w"]
+        logits = h.astype(jnp.float32) @ w.astype(jnp.float32).T
+        return constrain(logits, BATCH, None, MODEL)
+
+    # ------------------------------------------------------------- public
+
+    def apply(self, params, batch, *, mode="train"):
+        h_enc = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        h = self._dec_embed(params, tokens, 0)
+        positions = jnp.arange(tokens.shape[1])
+        h, caches = self._decoder_stack(
+            params, h, h_enc, positions=positions, mode=mode
+        )
+        if mode == "prefill":
+            return self._logits(params, h[:, -1:]), caches
+        return self._logits(params, h), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, aux = self.apply(params, batch)
+        targets = batch["targets"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        mask = (targets >= 0).astype(jnp.float32)
+        ce = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return ce, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch):
+        return self.apply(params, batch, mode="prefill")
+
+    def decode_step(self, params, cache, batch):
+        pos = batch["pos"]
+        h = self._dec_embed(params, batch["tokens"], pos)
+        h, new_cache = self._decoder_stack(
+            params, h, None, positions=pos[:, None], mode="decode",
+            caches=cache, cache_pos=pos,
+        )
+        return self._logits(params, h), new_cache
+
+    def init_cache(self, batch_size, seq_len, abstract=False):
+        cfg = self.cfg
+        KV, hd = cfg.n_kv_heads, cfg.head_dim
+        nl = cfg.n_layers
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+        def arr(shape):
+            if abstract:
+                return jax.ShapeDtypeStruct(shape, dt)
+            return jnp.zeros(shape, dt)
+
+        return {
+            "self": L.KVCache(
+                arr((nl, batch_size, seq_len, KV, hd)),
+                arr((nl, batch_size, seq_len, KV, hd)),
+            ),
+            "cross": L.KVCache(
+                arr((nl, batch_size, cfg.n_frames, KV, hd)),
+                arr((nl, batch_size, cfg.n_frames, KV, hd)),
+            ),
+        }

@@ -1,0 +1,335 @@
+"""Unified decoder LM covering the dense / MoE / hybrid(Mamba+attn) / xLSTM /
+VLM families of the assigned architecture pool.
+
+A model is a stationary *period* of layers (length cfg.period) scanned
+n_periods times (two-level structure keeps the HLO small for 61-72 layer
+archs while allowing heterogeneous layer patterns like jamba's 1:7
+attention:mamba interleave). Parameters for each period position are stacked
+over periods and consumed by lax.scan; remat (jax.checkpoint) wraps the period
+body.
+
+Modes:
+  apply/loss    training forward (+ optional patch/frame embeddings)
+  prefill       forward that also returns the serving cache
+  decode_step   one token against a cache (the `decode_*`/`long_*` cells)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import BATCH, MODEL, constrain, shard_batch
+from repro.models import layers as L
+from repro.models import ssm, xlstm
+
+
+def _mixer_init(key, cfg, kind):
+    if kind == "attn":
+        return {"attn": L.attn_init(key, cfg)}
+    if kind == "mamba":
+        return ssm.mamba_init(key, cfg)
+    if kind == "mlstm":
+        return xlstm.mlstm_init(key, cfg)
+    if kind == "slstm":
+        return xlstm.slstm_init(key, cfg)
+    raise ValueError(kind)
+
+
+def _ffn_init(key, cfg, kind):
+    if kind == "dense":
+        return L.mlp_init(key, cfg)
+    if kind == "moe":
+        return L.moe_init(key, cfg)
+    return None
+
+
+class LM:
+    """Decoder-only LM (plus VLM variant via stub patch embeddings)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.mixer_kinds = cfg.layer_kinds() * (
+            cfg.period // len(cfg.layer_kinds())
+        )
+        self.ffn_kinds = cfg.ffn_kinds()
+
+    # ------------------------------------------------------------- params
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        kp, *lks = jax.random.split(key, 2 + cfg.n_layers)
+        dt = L._dtype(cfg)
+        params: dict[str, Any] = {
+            "embed": {
+                "w": (jax.random.normal(kp, (cfg.vocab_size, cfg.d_model))
+                      * 0.02).astype(dt)
+            },
+            "final_norm": L.rmsnorm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {
+                "w": (jax.random.normal(lks[-1], (cfg.vocab_size, cfg.d_model))
+                      * 0.02).astype(dt)
+            }
+
+        def layer_params(key, pos):
+            k1, k2 = jax.random.split(key)
+            p = {
+                "mixer_norm": L.rmsnorm_init(cfg.d_model),
+                "mixer": _mixer_init(k1, cfg, self.mixer_kinds[pos]),
+            }
+            ffn = _ffn_init(k2, cfg, self.ffn_kinds[pos])
+            if ffn is not None:
+                p["ffn"] = ffn
+                p["ffn_norm"] = L.rmsnorm_init(cfg.d_model)
+            return p
+
+        layers = []
+        for pos in range(cfg.period):
+            per_rep = [
+                layer_params(lks[rep * cfg.period + pos], pos)
+                for rep in range(cfg.n_periods)
+            ]
+            layers.append(
+                jax.tree_util.tree_map(lambda *a: jnp.stack(a), *per_rep)
+            )
+        params["layers"] = layers
+        return params
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    # ------------------------------------------------------------- caches
+
+    def init_cache(self, batch_size: int, seq_len: int, abstract=False):
+        """Serving cache: list (per period position) of stacked-per-repeat
+        mixer states."""
+        cfg = self.cfg
+
+        def stack(tree):
+            return jax.tree_util.tree_map(
+                lambda x: (
+                    jax.ShapeDtypeStruct((cfg.n_periods,) + x.shape, x.dtype)
+                    if abstract
+                    else jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape)
+                ),
+                tree,
+            )
+
+        caches = []
+        for kind in self.mixer_kinds:
+            if kind == "attn":
+                c = L.init_kv_cache(cfg, batch_size, seq_len, abstract=abstract)
+            elif kind == "mamba":
+                c = ssm.init_mamba_cache(cfg, batch_size, abstract=abstract)
+            else:
+                c = xlstm.init_xlstm_cache(cfg, kind, batch_size, abstract=abstract)
+            caches.append(stack(c) if not abstract else stack(c))
+        return caches
+
+    # ------------------------------------------------------------ forward
+
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = params["embed"]["w"][tokens]
+        if cfg.n_patches and "patch_embeds" in batch:
+            h = jnp.concatenate(
+                [batch["patch_embeds"].astype(h.dtype), h], axis=1
+            )
+        return shard_batch(h)
+
+    def _layer(self, pp, kind, ffn_kind, h, *, positions, mode, cache, cache_pos):
+        cfg = self.cfg
+        # pin the canonical activation sharding at every layer boundary —
+        # without this, sharding propagation inside the layer scan loses the
+        # batch sharding and XLA falls back to full-activation all-gathers
+        h = constrain(h, BATCH, None, None)
+        hn = L.rmsnorm(pp["mixer_norm"], h)
+        hn = constrain(hn, BATCH, None, None)
+        new_cache = cache
+        prefill = mode == "prefill"
+        decode_cache = cache if mode == "decode" else None
+        if kind == "attn":
+            out, new_cache = L.attention(
+                pp["mixer"]["attn"], cfg, hn, positions=positions,
+                cache=decode_cache, cache_pos=cache_pos, prefill=prefill,
+            )
+        elif kind == "mamba":
+            out, new_cache = ssm.mamba(
+                pp["mixer"], cfg, hn, cache=decode_cache, want_cache=prefill
+            )
+        elif kind == "mlstm":
+            out, new_cache = xlstm.mlstm(
+                pp["mixer"], cfg, hn, cache=decode_cache, want_cache=prefill
+            )
+        else:
+            out, new_cache = xlstm.slstm(
+                pp["mixer"], cfg, hn, cache=decode_cache, want_cache=prefill
+            )
+        h = constrain(h + out, BATCH, None, None)
+        aux = jnp.zeros((), jnp.float32)
+        if ffn_kind != "none":
+            hn = constrain(L.rmsnorm(pp["ffn_norm"], h), BATCH, None, None)
+            if ffn_kind == "dense":
+                h = h + L.mlp(pp["ffn"], hn)
+            else:
+                y, aux = L.moe(pp["ffn"], cfg, hn)
+                h = h + y
+            h = constrain(h, BATCH, None, None)
+        return h, new_cache, aux
+
+    def _stack(self, params, h, *, positions, mode, caches=None, cache_pos=None):
+        cfg = self.cfg
+
+        # nested remat: with multi-layer periods (jamba's 8) the period body's
+        # live intermediates peak at period-width x per-layer temps; wrapping
+        # each layer in its own checkpoint bounds the peak at ONE layer
+        # (measured 486 GB/chip -> fits, jamba train_4k)
+        if cfg.remat and mode == "train" and cfg.period > 1:
+            def layer_fn(pp, kind, ffn_kind, h, **kw):
+                inner = jax.checkpoint(
+                    lambda pp_, h_: self._layer(pp_, kind, ffn_kind, h_, **kw)
+                )
+                return inner(pp, h)
+        else:
+            layer_fn = self._layer
+
+        def period_body(carry, xs):
+            h, aux = carry
+            layer_params, cache_in = xs
+            cache_out = []
+            for pos in range(cfg.period):
+                pp = layer_params[pos]
+                c_in = cache_in[pos] if cache_in is not None else None
+                h, c, a = layer_fn(
+                    pp, self.mixer_kinds[pos], self.ffn_kinds[pos], h,
+                    positions=positions, mode=mode, cache=c_in,
+                    cache_pos=cache_pos,
+                )
+                cache_out.append(c)
+                aux = aux + a
+            if cache_out[0] is None:
+                cache_out = 0  # dummy scan output
+            return (h, aux), cache_out
+
+        body = period_body
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(period_body)
+
+        xs = (params["layers"], caches if caches is not None else
+              [None] * cfg.period)
+        if caches is None:
+            # scan requires uniform xs pytrees; replace None cache slots with
+            # per-period dummy zeros
+            xs = (params["layers"], [jnp.zeros((cfg.n_periods,))] * cfg.period)
+
+            def body_nocache(carry, xs_):
+                lp, _ = xs_
+                return body(carry, (lp, None))
+
+            (h, aux), ys = lax.scan(
+                body_nocache, (h, jnp.zeros((), jnp.float32)), xs
+            )
+            return h, aux, (ys if mode == "prefill" else None)
+        (h, aux), new_caches = lax.scan(
+            body, (h, jnp.zeros((), jnp.float32)), xs
+        )
+        return h, aux, new_caches
+
+    def _logits(self, params, h):
+        cfg = self.cfg
+        w = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
+        logits = h.astype(jnp.float32) @ w.astype(jnp.float32).T
+        return constrain(logits, BATCH, None, MODEL)
+
+    def apply(self, params, batch, *, mode="train"):
+        h = self._embed(params, batch)
+        positions = jnp.arange(h.shape[1])
+        h, aux, caches = self._stack(params, h, positions=positions, mode=mode)
+        h = L.rmsnorm(params["final_norm"], h)
+        if mode == "prefill":
+            return self._logits(params, h[:, -1:]), caches
+        return self._logits(params, h), aux
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h = self._embed(params, batch)
+        positions = jnp.arange(h.shape[1])
+        h, aux, _ = self._stack(params, h, positions=positions, mode="train")
+        h = L.rmsnorm(params["final_norm"], h)
+        targets = batch["targets"]
+        w = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
+
+        # Chunked cross-entropy: the (B, S, V) logits tensor is never fully
+        # materialized — per-chunk logits + logsumexp under jax.checkpoint
+        # (recompute in bwd). At 152k vocab the full-logit temp alone was
+        # ~10 GB/chip (qwen2 train cell); chunks bound it at (B, C, V).
+        S = h.shape[1]
+        chunk = min(512, S)
+        if S % chunk:
+            chunk = S  # odd lengths: single chunk
+
+        @jax.checkpoint
+        def chunk_ce(h_c, t_c):
+            logits = h_c.astype(jnp.float32) @ w.astype(jnp.float32).T
+            logits = constrain(logits, BATCH, None, MODEL)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(
+                logits, t_c[..., None], axis=-1
+            )[..., 0] - lse
+            mask = (t_c >= 0).astype(jnp.float32)
+            return -(ll * mask).sum(), mask.sum()
+
+        n_chunks = S // chunk
+        hs = h.reshape(h.shape[0], n_chunks, chunk, -1).transpose(1, 0, 2, 3)
+        ts = targets.reshape(targets.shape[0], n_chunks, chunk).transpose(
+            1, 0, 2
+        )
+        def ce_step(c, x):
+            s, n = chunk_ce(*x)
+            return (c[0] + s, c[1] + n), None
+
+        (tot, cnt), _ = lax.scan(
+            ce_step, (jnp.zeros(()), jnp.zeros(())), (hs, ts)
+        )
+        ce = tot / jnp.maximum(cnt, 1.0)
+        return ce + 0.01 * aux / max(self.cfg.n_layers, 1), {
+            "ce": ce, "aux": aux
+        }
+
+    # ----------------------------------------------------------- serving
+
+    def prefill(self, params, batch):
+        """Returns (last_logits, cache-list) for subsequent decode steps."""
+        return self.apply(params, batch, mode="prefill")
+
+    def decode_step(self, params, cache, batch):
+        """batch: tokens (B,1), pos (B,). Returns (logits, new_cache)."""
+        pos = batch["pos"]
+        h = params["embed"]["w"][batch["tokens"]]
+        h = shard_batch(h)
+        h, _, new_cache = self._stack(
+            params, h, positions=pos[:, None], mode="decode",
+            caches=cache, cache_pos=pos,
+        )
+        h = L.rmsnorm(params["final_norm"], h)
+        return self._logits(params, h), new_cache
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_model(cfg: ModelConfig) -> "LM":
+    from repro.models.encdec import EncDecLM
+
+    if cfg.encoder_layers:
+        return EncDecLM(cfg)
+    return LM(cfg)
+
+
+def build_model(cfg: ModelConfig):
+    return _cached_model(cfg)

@@ -1,0 +1,163 @@
+"""Mamba (S6) mixer: chunked selective scan for training/prefill, O(1)-state
+recurrent step for decode.
+
+The (B, L, d_inner, d_state) discretized-transition tensor is only ever
+materialized one chunk at a time (cfg.mamba.chunk, default 256) inside a
+lax.scan over chunks — the full-sequence tensor for jamba-398B's train_4k cell
+would be ~1 PB. Within a chunk the recurrence is a first-order linear scan
+solved with lax.associative_scan; across chunks the (B, d_inner, d_state)
+state is the scan carry. This is the TPU-idiomatic equivalent of the fused
+CUDA selective-scan kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import BATCH, MODEL, constrain
+from repro.models.layers import _dtype
+
+
+def mamba_init(key, cfg):
+    d = cfg.d_model
+    di = cfg.mamba.expand * d
+    ds = cfg.mamba.d_state
+    dtr = cfg.mamba.dt_rank or -(-d // 16)
+    k = cfg.mamba.d_conv
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    std = d ** -0.5
+    return {
+        "mamba": {
+            "w_in": (jax.random.normal(ks[0], (d, 2 * di)) * std).astype(dt),
+            "conv_w": (jax.random.normal(ks[1], (k, di)) * k ** -0.5).astype(dt),
+            "conv_b": jnp.zeros((di,), dt),
+            "w_bcdt": (jax.random.normal(ks[2], (di, 2 * ds + dtr)) * di ** -0.5).astype(dt),
+            "dt_w": (jax.random.normal(ks[3], (dtr, di)) * dtr ** -0.5).astype(dt),
+            "dt_bias": jnp.log(
+                jnp.expm1(jnp.exp(jax.random.uniform(
+                    ks[4], (di,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1)
+                )))
+            ).astype(jnp.float32),
+            "a_log": jnp.log(
+                jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+            ),
+            "d": jnp.ones((di,), jnp.float32),
+            "w_out": (jax.random.normal(ks[5], (di, d)) * di ** -0.5).astype(dt),
+        }
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,di); w: (k,di)."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for t in range(k):
+        shift = k - 1 - t
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + xs.astype(jnp.float32) * w[t].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_proj(p, xc):
+    """Shared projections: xc (B,L,di) -> (dt, Bc, Cc)."""
+    m = p["mamba"]
+    ds = m["a_log"].shape[1]
+    bcdt = xc @ m["w_bcdt"]
+    Bc = bcdt[..., :ds].astype(jnp.float32)
+    Cc = bcdt[..., ds : 2 * ds].astype(jnp.float32)
+    dt_low = bcdt[..., 2 * ds :]
+    dt = jax.nn.softplus(
+        (dt_low @ m["dt_w"]).astype(jnp.float32) + m["dt_bias"]
+    )
+    return dt, Bc, Cc
+
+
+def mamba(p, cfg, x, *, cache=None, want_cache=False):
+    """x: (B,S,d). Returns (out, new_cache). cache != None -> decode (S == 1);
+    want_cache -> prefill (returns final conv/ssm states)."""
+    m = p["mamba"]
+    B, S, d = x.shape
+    di = m["conv_w"].shape[1]
+    ds = m["a_log"].shape[1]
+    k_conv = m["conv_w"].shape[0]
+    xz = x @ m["w_in"]
+    xin, z = xz[..., :di], xz[..., di:]
+    xin = constrain(xin, BATCH, None, MODEL)
+
+    if cache is None:
+        xc = jax.nn.silu(_causal_conv(xin, m["conv_w"], m["conv_b"]))
+        y, h_last = _chunked_scan(p, cfg, xc)
+        new_cache = (
+            {"conv": xin[:, -(k_conv - 1):, :], "ssm": h_last}
+            if want_cache else None
+        )
+    else:
+        # decode: roll conv buffer, single-step SSM recurrence
+        conv_buf = jnp.concatenate([cache["conv"], xin], axis=1)  # (B,k,di)
+        xc = jax.nn.silu(
+            jnp.einsum("bkd,kd->bd", conv_buf.astype(jnp.float32),
+                       m["conv_w"].astype(jnp.float32)) + m["conv_b"]
+        )[:, None, :].astype(x.dtype)
+        dt, Bc, Cc = _ssm_proj(p, xc)
+        A = -jnp.exp(m["a_log"])
+        dA = jnp.exp(dt[:, 0, :, None] * A)                     # (B,di,ds)
+        dBx = dt[:, 0, :, None] * xc[:, 0, :, None].astype(jnp.float32) \
+            * Bc[:, 0, None, :]
+        h = dA * cache["ssm"] + dBx
+        y = jnp.einsum("bds,bs->bd", h, Cc[:, 0])[:, None, :]
+        y = y + m["d"] * xc.astype(jnp.float32)
+        new_cache = {"conv": conv_buf[:, 1:, :], "ssm": h}
+
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = constrain(y, BATCH, None, MODEL)
+    return y @ m["w_out"], new_cache
+
+
+def _chunked_scan(p, cfg, xc):
+    """Chunked selective scan. xc: (B,S,di) post-conv. Returns (B,S,di) f32."""
+    m = p["mamba"]
+    B, S, di = xc.shape
+    L = min(cfg.mamba.chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+    ds = m["a_log"].shape[1]
+    A = -jnp.exp(m["a_log"])                                     # (di,ds)
+
+    xch = xc.reshape(B, nc, L, di).transpose(1, 0, 2, 3)
+
+    # checkpointed chunk body: without it, scan's VJP stores every chunk's
+    # (B, L, d_inner, d_state) discretization residuals — 268 GB/chip on
+    # jamba train_4k; with it only (B, d_inner, d_state) carries persist
+    @jax.checkpoint
+    def chunk_step(h0, xk):
+        dt, Bc, Cc = _ssm_proj(p, xk)                            # (B,L,*)
+        dA = jnp.exp(dt[..., None] * A)                          # (B,L,di,ds)
+        dBx = dt[..., None] * xk[..., None].astype(jnp.float32) * Bc[:, :, None, :]
+
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, a2 * b1 + b2
+
+        a_cum, b_cum = lax.associative_scan(combine, (dA, dBx), axis=1)
+        h = b_cum + a_cum * h0[:, None]                          # (B,L,di,ds)
+        y = jnp.einsum("blds,bls->bld", h, Cc)
+        y = y + m["d"] * xk.astype(jnp.float32)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h_last, ys = lax.scan(chunk_step, h0, xch)
+    return ys.transpose(1, 0, 2, 3).reshape(B, S, di), h_last
+
+
+def init_mamba_cache(cfg, batch, abstract=False):
+    di = cfg.mamba.expand * cfg.d_model
+    shapes = {
+        "conv": ((batch, cfg.mamba.d_conv - 1, di), _dtype(cfg)),
+        "ssm": ((batch, di, cfg.mamba.d_state), jnp.float32),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}

@@ -1,0 +1,228 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, sequential scan with block-diagonal recurrence).
+
+mLSTM training/prefill uses a chunked linear-attention formulation (state
+(B, nh, hd, hd) carried across chunks; intra-chunk quadratic term of size
+(B, L, L, nh) only) — the TPU-native equivalent of the fused recurrent CUDA
+kernels in the xLSTM reference code. Decode is a single O(1) state update,
+which is what makes the long_500k cell runnable for this family.
+
+Gate stabilization follows the paper's m-state trick (log-space running max).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import BATCH, MODEL, constrain
+from repro.models.layers import _dtype
+
+NEG = -1e30
+
+
+# --------------------------------------------------------------------- mLSTM
+
+def mlstm_init(key, cfg):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    std = d ** -0.5
+    return {
+        "mlstm": {
+            "w_qkv": (jax.random.normal(ks[0], (d, 3 * d)) * std).astype(dt),
+            "w_if": (jax.random.normal(ks[1], (d, 2 * nh)) * std).astype(jnp.float32),
+            "w_out": (jax.random.normal(ks[2], (d, d)) * std).astype(dt),
+        }
+    }
+
+
+def mlstm(p, cfg, x, *, cache=None, want_cache=False):
+    """x: (B,S,d) -> (out, new_cache). cache != None -> decode (S == 1);
+    want_cache -> prefill (returns final (C, n, m) state)."""
+    m = p["mlstm"]
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    qkv = x @ m["w_qkv"]
+    q, k, v = [
+        a.reshape(B, S, nh, hd).astype(jnp.float32)
+        for a in jnp.split(qkv, 3, axis=-1)
+    ]
+    q = constrain(q, BATCH, None, MODEL, None)
+    k = k * hd ** -0.5
+    gates = x.astype(jnp.float32) @ m["w_if"]
+    ig = gates[..., :nh]                       # (B,S,nh) log input gate
+    fg = jax.nn.log_sigmoid(gates[..., nh:])   # (B,S,nh) log forget gate
+
+    if cache is None:
+        y, state = _mlstm_chunked(cfg, q, k, v, ig, fg)
+        new_cache = state if want_cache else None
+    else:
+        C, n, mstate = cache["C"], cache["n"], cache["m"]
+        i0, f0 = ig[:, 0], fg[:, 0]                       # (B,nh)
+        m_new = jnp.maximum(f0 + mstate, i0)
+        i_ = jnp.exp(i0 - m_new)[..., None]
+        f_ = jnp.exp(f0 + mstate - m_new)[..., None]
+        k0, v0, q0 = k[:, 0], v[:, 0], q[:, 0]            # (B,nh,hd)
+        C = f_[..., None] * C + i_[..., None] * k0[..., :, None] * v0[..., None, :]
+        n = f_ * n + i_ * k0
+        num = jnp.einsum("bhd,bhde->bhe", q0, C)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", q0, n)), jnp.exp(-m_new)
+        )[..., None]
+        y = (num / den)[:, None].reshape(B, 1, d)
+        new_cache = {"C": C, "n": n, "m": m_new}
+
+    y = y.astype(x.dtype)
+    y = constrain(y, BATCH, None, MODEL)
+    return y @ m["w_out"], new_cache
+
+
+def _mlstm_chunked(cfg, q, k, v, ig, fg):
+    """Chunk-parallel mLSTM. All inputs f32; q,k,v: (B,S,nh,hd)."""
+    B, S, nh, hd = q.shape
+    L = min(cfg.attn_chunk, S, 256)
+    assert S % L == 0
+    nc = S // L
+
+    def resh(a):
+        return a.reshape(B, nc, L, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    igs, fgs = resh(ig), resh(fg)
+
+    @jax.checkpoint
+    def chunk(carry, inp):
+        C, n, m0 = carry                   # (B,nh,hd,hd), (B,nh,hd), (B,nh)
+        qc, kc, vc, ic, fc = inp
+        cum_f = jnp.cumsum(fc, axis=1)                     # (B,L,nh)
+        # log weight of source s as seen at chunk end / at step t
+        #   b_s = i_s + (cum_f_L - cum_f_s)   (contribution to end state)
+        #   at step t: a_ts = i_s + cum_f_t - cum_f_s  for s <= t
+        total = cum_f[:, -1]                               # (B,nh)
+        m_intra = (ic + cum_f[:, -1:][..., :] - cum_f).max(axis=1)  # (B,nh)
+        m_new = jnp.maximum(m0 + total, m_intra)
+
+        # inter-chunk: y_t += (q_t * exp(cum_f_t + m0 - m_new_t)) @ C
+        # stabilize per step with running m: use m_new (chunk-level) for all t
+        decay_q = jnp.exp(cum_f + m0[:, None] - m_new[:, None])    # (B,L,nh)
+        y_inter = jnp.einsum("blhd,bhde,blh->blhe", qc, C, decay_q)
+        n_inter = jnp.einsum("bhd,blh->blhd", n, decay_q)
+
+        # intra-chunk quadratic term
+        diff = cum_f[:, :, None, :] - cum_f[:, None, :, :]          # (B,L,L,nh) t,s
+        a = ic[:, None, :, :] + diff - m_new[:, None, None, :]
+        tmask = jnp.tril(jnp.ones((L, L), bool))
+        a = jnp.where(tmask[None, :, :, None], a, NEG)
+        w = jnp.exp(a)                                              # (B,L,L,nh)
+        s_qk = jnp.einsum("blhd,bmhd->blmh", qc, kc)
+        y_intra = jnp.einsum("blmh,blmh,bmhd->blhd", w, s_qk, vc)
+        n_intra = jnp.einsum("blmh,bmhd->blhd", w, kc)
+
+        num = y_inter + y_intra
+        n_t = n_inter + n_intra
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("blhd,blhd->blh", qc, n_t)),
+            jnp.exp(-m_new)[:, None],
+        )[..., None]
+        y = num / den                                               # (B,L,nh,hd)
+
+        # end-of-chunk state update
+        scale_old = jnp.exp(m0 + total - m_new)
+        wk = jnp.exp(ic + total[:, None] - cum_f - m_new[:, None])  # (B,L,nh)
+        C_new = scale_old[..., None, None] * C + jnp.einsum(
+            "blh,blhd,blhe->bhde", wk, kc, vc
+        )
+        n_new = scale_old[..., None] * n + jnp.einsum("blh,blhd->bhd", wk, kc)
+        return (C_new, n_new, m_new), y
+
+    C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, nh, hd), jnp.float32)
+    m0 = jnp.full((B, nh), 0.0, jnp.float32)
+    (C, n, mst), ys = lax.scan(chunk, (C0, n0, m0), (qs, ks, vs, igs, fgs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, nh * hd)
+    return y, {"C": C, "n": n, "m": mst}
+
+
+# --------------------------------------------------------------------- sLSTM
+
+def slstm_init(key, cfg):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    std = d ** -0.5
+    return {
+        "slstm": {
+            "w_in": (jax.random.normal(ks[0], (d, 4 * d)) * std).astype(dt),
+            "w_rec": (jax.random.normal(ks[1], (nh, hd, 4 * hd)) * hd ** -0.5).astype(jnp.float32),
+            "w_down": (jax.random.normal(ks[2], (d, d)) * std).astype(dt),
+        }
+    }
+
+
+def _slstm_step(w_rec, nh, hd, carry, zx):
+    """One sLSTM time step. zx: (B, 4d) input pre-activations."""
+    c, n, h, m0 = carry                   # all (B, nh, hd) except m0 (B,nh,hd)
+    B = zx.shape[0]
+    rec = jnp.einsum("bhd,hde->bhe", h, w_rec)             # (B,nh,4hd)
+    pre = zx.reshape(B, nh, 4 * hd) + rec
+    zt = jnp.tanh(pre[..., :hd])
+    it = pre[..., hd : 2 * hd]                             # log-space input gate
+    ft = jax.nn.log_sigmoid(pre[..., 2 * hd : 3 * hd])     # log forget gate
+    ot = jax.nn.sigmoid(pre[..., 3 * hd :])
+    m_new = jnp.maximum(ft + m0, it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + m0 - m_new)
+    c_new = f_ * c + i_ * zt
+    n_new = jnp.maximum(f_ * n + i_, jnp.exp(-m_new))
+    h_new = ot * c_new / n_new
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm(p, cfg, x, *, cache=None, want_cache=False):
+    """x: (B,S,d) -> (out, new_cache). Sequential over S (inherently)."""
+    s = p["slstm"]
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    zx = (x @ s["w_in"]).astype(jnp.float32)               # (B,S,4d)
+
+    if cache is None:
+        carry = tuple(
+            jnp.zeros((B, nh, hd), jnp.float32) for _ in range(4)
+        )
+    else:
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+
+    if S == 1:
+        carry, h = _slstm_step(s["w_rec"], nh, hd, carry, zx[:, 0])
+        hs = h[:, None]
+    else:
+        carry, hs = lax.scan(
+            lambda cr, z: _slstm_step(s["w_rec"], nh, hd, cr, z),
+            carry,
+            zx.transpose(1, 0, 2),
+        )
+        hs = hs.transpose(1, 0, 2, 3)
+    y = hs.reshape(B, -1, d).astype(x.dtype)
+    new_cache = {
+        "c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]
+    } if (cache is not None or want_cache) else None
+    return y @ s["w_down"], new_cache
+
+
+def init_xlstm_cache(cfg, kind, batch, abstract=False):
+    nh, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    if kind == "mlstm":
+        shapes = {
+            "C": (batch, nh, hd, hd), "n": (batch, nh, hd), "m": (batch, nh)
+        }
+    else:
+        shapes = {k: (batch, nh, hd) for k in ("c", "n", "h", "m")}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, jnp.float32) for k, s in shapes.items()}
+    return {k: jnp.zeros(s, jnp.float32) for k, s in shapes.items()}

@@ -1,0 +1,142 @@
+"""AdamW with global-norm clipping and quantized moments.
+
+``moment_dtype`` controls memory of the first/second moments:
+  "float32"  standard
+  "bfloat16" half-size moments (fine in practice with fp32 update math)
+  "int8"     block-wise 8-bit quantized second moment (8-bit-Adam style;
+             first moment bf16). Required to fit kimi-k2-1T on 512 v5e chips:
+             p(2) + g(2) + m(2) + v(1) = 7 bytes/param vs 16 for fp32 Adam.
+
+State tensors inherit the parameter PartitionSpecs (they are elementwise), so
+FSDP shards optimizer state automatically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"   # float32 | bfloat16 | int8
+
+
+_Q_BLOCK = 256
+
+
+def _blocked_shape(shape):
+    """int8 moments are blocked along the LAST axis only: (..., nb, 256).
+
+    Blocking must preserve the leading (sharded) axes — a global flatten
+    makes the quantize/dequantize reshapes sharding-incompatible and the
+    partitioner all-gathers the full parameter tensor (measured 6 x 1.38
+    TB/chip on kimi-k2-1T train before this layout)."""
+    if not shape:
+        return (1, _Q_BLOCK)
+    last = shape[-1]
+    nb = -(-last // _Q_BLOCK)
+    return tuple(shape[:-1]) + (nb, _Q_BLOCK)
+
+
+def _quantize_blockwise(x):
+    """int8 absmax quantization, blocked along the last axis."""
+    if x.ndim == 0:
+        x = x.reshape(1)
+    last = x.shape[-1]
+    pad = (-last) % _Q_BLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = x.reshape(*x.shape[:-1], -1, _Q_BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize_blockwise(q, scale, shape):
+    x = q.astype(jnp.float32) * scale
+    if not shape:
+        return x.reshape(-1)[0]
+    x = x.reshape(*x.shape[:-2], x.shape[-2] * _Q_BLOCK)
+    return x[..., : shape[-1]].reshape(shape)
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    def m_init(p):
+        dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+              "int8": jnp.bfloat16}[cfg.moment_dtype]
+        return jnp.zeros(p.shape, dt)
+
+    def v_init(p):
+        if cfg.moment_dtype == "int8":
+            bs = _blocked_shape(p.shape)
+            return {
+                "q": jnp.zeros(bs, jnp.int8),
+                "scale": jnp.zeros(bs[:-1] + (1,), jnp.float32),
+            }
+        dt = jnp.float32 if cfg.moment_dtype == "float32" else jnp.bfloat16
+        return jnp.zeros(p.shape, dt)
+
+    return {
+        "m": jax.tree_util.tree_map(m_init, params),
+        "v": jax.tree_util.tree_map(v_init, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig, lr_t):
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    bc1 = 1 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        if cfg.moment_dtype == "int8":
+            v_f = _dequantize_blockwise(v["q"], v["scale"], p.shape)
+        else:
+            v_f = v.astype(jnp.float32)
+        v_new = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr_t * step).astype(p.dtype)
+        m_out = m_new.astype(m.dtype)
+        if cfg.moment_dtype == "int8":
+            q, s = _quantize_blockwise(v_new)
+            v_out = {"q": q, "scale": s}
+        else:
+            v_out = v_new.astype(
+                jnp.float32 if cfg.moment_dtype == "float32" else jnp.bfloat16
+            )
+        return p_new, m_out, v_out
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, gnorm

@@ -1,0 +1,51 @@
+"""Gradient compression for cross-pod data-parallel all-reduce.
+
+At 512+ chips the inter-pod DCI/ICI link is the scarcest resource; the
+standard mitigation is to all-reduce gradients in a compressed encoding.
+We implement int8 block-wise absmax compression with error feedback:
+
+    q_t = Q(g_t + e_{t-1});  e_t = (g_t + e_{t-1}) - D(q_t)
+
+``compress_int8``/``decompress_int8`` are pure and tested round-trip; the
+trainer applies them around the `pod`-axis psum when
+``TrainConfig.compress_grads`` is set. Error feedback state is carried in the
+optimizer state pytree so checkpoints capture it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 256
+
+
+def compress_int8(x):
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True), 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale * 127.0), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def decompress_int8(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale / 127.0).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_tree(grads):
+    """Compress every leaf; returns (quantized tree, residual tree)."""
+    def one(g):
+        q, s = compress_int8(g)
+        deq = decompress_int8(q, s, g.shape)
+        return (q, s), (g.astype(jnp.float32) - deq)
+
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    outs = [one(g) for g in leaves]
+    qtree = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    resid = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return qtree, resid

@@ -1,0 +1,130 @@
+"""Continuous-batching serving engine over the KV-cache decode step.
+
+A fixed pool of B slots shares one decode_step executable (the same
+serve_step the decode_32k/long_500k dry-run cells lower at 256/512 chips).
+Requests are admitted into free slots as they arrive; each slot tracks its
+own position, so sequences of different lengths decode in the same batched
+step (per-sequence `pos` + kv_len masking — no head-of-line blocking).
+Finished slots are recycled without touching the others' cache rows.
+
+This is the single-host reference runtime; at production scale the same
+loop runs under pjit with the cache sequence-sharded over `model`
+(launch/dryrun.py cache_specs) and slots sharded over `data`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list          # token ids
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    # filled by the engine:
+    rid: int = -1
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
+                 sampler: Callable | None = None):
+        self.model = model
+        self.params = params
+        self.B = slots
+        self.max_len = max_len
+        self.sampler = sampler or (lambda logits, rid: int(jnp.argmax(logits)))
+        self._rid = itertools.count()
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * slots
+        self.pos = np.zeros(slots, np.int32)       # next position per slot
+        self.cache = model.init_cache(slots, max_len)
+        self._decode = jax.jit(model.decode_step)
+        self._next_tok = np.zeros((slots, 1), np.int32)
+        self._pending_prompt: dict[int, list] = {}
+        self.steps = 0
+
+    # ------------------------------------------------------------- intake
+
+    def submit(self, req: Request) -> int:
+        req.rid = next(self._rid)
+        self.queue.append(req)
+        return req.rid
+
+    def _admit(self):
+        """Fill free slots; prefill the prompt token-by-token through the
+        decode step (single-kernel runtime; a production engine would use
+        model.prefill for the prompt — both paths are numerically identical,
+        see tests/test_consistency.py)."""
+        for slot in range(self.B):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            assert len(req.prompt) + req.max_new_tokens <= self.max_len, (
+                "request exceeds engine max_len"
+            )
+            self.active[slot] = req
+            self.pos[slot] = 0
+            self._pending_prompt[slot] = list(req.prompt)
+
+    # -------------------------------------------------------------- step
+
+    def step(self):
+        """One batched decode step across all active slots."""
+        self._admit()
+        if not any(a is not None for a in self.active):
+            return False
+        pending = self._pending_prompt
+        tokens = np.zeros((self.B, 1), np.int32)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            if pending.get(slot):
+                tokens[slot, 0] = pending[slot].pop(0)
+            else:
+                tokens[slot, 0] = self._next_tok[slot, 0]
+        logits, self.cache = self._decode(
+            self.params, self.cache,
+            {"tokens": jnp.asarray(tokens),
+             "pos": jnp.asarray(self.pos)},
+        )
+        logits = np.asarray(logits[:, 0].astype(jnp.float32))
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[slot] += 1
+            still_prompt = bool(pending.get(slot))
+            if still_prompt:
+                continue
+            tok = self.sampler(logits[slot], req.rid)
+            self._next_tok[slot, 0] = tok
+            req.output.append(tok)
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if hit_eos or len(req.output) >= req.max_new_tokens:
+                req.done = True
+                self.active[slot] = None   # recycle the slot
+        self.steps += 1
+        return True
+
+    # -------------------------------------------------------------- run
+
+    def run(self, requests, *, max_steps: int | None = None):
+        """Serve a list of requests to completion; returns them (done)."""
+        for r in requests:
+            self.submit(r)
+        budget = max_steps if max_steps is not None else 10_000
+        while budget and (self.queue or any(
+            a is not None for a in self.active
+        )):
+            if not self.step():
+                break
+            budget -= 1
+        return requests

@@ -1,0 +1,2 @@
+from repro.train.train_step import TrainConfig, make_train_step, make_eval_step
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint, latest_step

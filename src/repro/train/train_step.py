@@ -1,0 +1,106 @@
+"""pjit-able train / eval / serve steps.
+
+``make_train_step`` builds the canonical fused step:
+
+    grads = grad(loss)(params, batch)
+    [optional int8-compressed cross-pod all-reduce — under pjit the `pod`
+     axis reduction is implicit in the sharded sum; compression is applied
+     as quantize->dequantize on the gradient pytree, which XLA places
+     around the collective]
+    params, opt_state = adamw(grads, ...)
+
+All functions are pure and jit-friendly; sharding comes from in_shardings at
+the jit boundary (see repro.launch.dryrun / repro.launch.train).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+)
+from repro.optim.compression import compress_int8, decompress_int8
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    compress_grads: bool = False  # int8 gradient compression (cross-pod DP)
+
+
+def init_train_state(model, key, train_cfg: TrainConfig):
+    params = model.init(key)
+    opt_state = adamw_init(params, train_cfg.optimizer)
+    return params, opt_state
+
+
+def abstract_train_state(model, train_cfg: TrainConfig):
+    return jax.eval_shape(
+        lambda: init_train_state(model, jax.random.key(0), train_cfg)
+    )
+
+
+def make_train_step(model, train_cfg: TrainConfig):
+    opt_cfg = train_cfg.optimizer
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True
+        )(params, batch)
+        if train_cfg.compress_grads:
+            # quantize->dequantize around the DP reduction: XLA reduces the
+            # int8 payload across the pod axis instead of fp32 gradients
+            def qdq(g):
+                q, s = compress_int8(g)
+                return decompress_int8(q, s, g.shape).astype(g.dtype)
+
+            grads = jax.tree_util.tree_map(qdq, grads)
+        lr_t = cosine_schedule(
+            opt_state["count"],
+            base_lr=opt_cfg.lr,
+            warmup_steps=train_cfg.warmup_steps,
+            total_steps=train_cfg.total_steps,
+        )
+        params, opt_state, gnorm = adamw_update(
+            grads, opt_state, params, opt_cfg, lr_t
+        )
+        out_metrics = {
+            "loss": loss.astype(jnp.float32),
+            "grad_norm": gnorm,
+            "lr": lr_t,
+            **{k: v.astype(jnp.float32) for k, v in metrics.items()},
+        }
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(model):
+    def serve_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    return serve_step

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests must see the single real CPU device (the 512-device flag is scoped to
+# the dry-run process only).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

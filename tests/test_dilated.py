@@ -1,0 +1,25 @@
+"""Segregated dilated convolution (paper §5 future-work, implemented here)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dilated_conv import dilated_conv2d
+
+
+RNG = np.random.default_rng(3)
+
+
+@pytest.mark.parametrize("n_in,n_k", [(6, 2), (8, 3), (12, 4), (9, 3)])
+def test_segregated_equals_conventional(n_in, n_k):
+    x = jnp.asarray(RNG.normal(size=(2, n_in, n_in, 3)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(n_k, n_k, 3, 4)).astype(np.float32))
+    a = dilated_conv2d(x, k, method="conventional")
+    b = dilated_conv2d(x, k, method="segregated")
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_too_small_input_raises():
+    x = jnp.zeros((1, 4, 4, 1))
+    k = jnp.zeros((3, 3, 1, 1))
+    with pytest.raises(ValueError):
+        dilated_conv2d(x, k, method="segregated")

@@ -1,0 +1,75 @@
+"""Trip-count-aware HLO walker vs XLA cost analysis (the roofline source)."""
+import jax
+import jax.numpy as jnp
+from jax import lax
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def test_unrolled_dot_flops_match_xla():
+    W = jnp.zeros((64, 64), jnp.float32)
+    x = jnp.ones((4, 64), jnp.float32)
+    c = jax.jit(lambda W, x: x @ W).lower(W, x).compile()
+    walk = H.analyze(c.as_text())
+    assert walk["flops"] == 2 * 4 * 64 * 64
+
+
+def test_scan_flops_equal_unrolled():
+    W = jnp.zeros((8, 64, 64), jnp.float32)
+    x = jnp.ones((4, 64), jnp.float32)
+
+    def scan_fn(W, x):
+        return lax.scan(lambda h, w: (jnp.tanh(h @ w), None), x, W)[0].sum()
+
+    def unroll_fn(W, x):
+        h = x
+        for i in range(8):
+            h = jnp.tanh(h @ W[i])
+        return h.sum()
+
+    ws = H.analyze(jax.jit(scan_fn).lower(W, x).compile().as_text())
+    wu = H.analyze(jax.jit(unroll_fn).lower(W, x).compile().as_text())
+    assert ws["flops"] == wu["flops"] == 2 * 4 * 64 * 64 * 8
+
+
+def test_nested_scan_multiplies():
+    W = jnp.zeros((3, 5, 16, 16), jnp.float32)
+    x = jnp.ones((2, 16), jnp.float32)
+
+    def inner(h, Ws):
+        return lax.scan(lambda h, w: (h @ w, None), h, Ws)[0]
+
+    def outer(W, x):
+        return lax.scan(lambda h, Ws: (inner(h, Ws), None), x, W)[0].sum()
+
+    w = H.analyze(jax.jit(outer).lower(W, x).compile().as_text())
+    assert w["flops"] == 2 * 2 * 16 * 16 * 15
+
+
+def test_while_trip_counts():
+    W = jnp.zeros((12, 8, 8), jnp.float32)
+    x = jnp.ones((2, 8), jnp.float32)
+    c = jax.jit(
+        lambda W, x: lax.scan(lambda h, w: (h @ w, None), x, W)[0].sum()
+    ).lower(W, x).compile()
+    trips = [w["trips"] for w in H.while_summary(c.as_text())]
+    assert 12 in trips
+
+
+def test_conv_flops():
+    x = jnp.zeros((1, 8, 8, 3), jnp.float32)
+    k = jnp.zeros((3, 3, 3, 7), jnp.float32)
+    c = jax.jit(
+        lambda x, k: lax.conv_general_dilated(
+            x, k, (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    ).lower(x, k).compile()
+    w = H.analyze(c.as_text())
+    assert w["flops"] == 2 * 6 * 6 * 7 * 3 * 3 * 3
+
+
+def test_shape_bytes():
+    assert H._type_bytes("f32[4,8]{1,0}") == 128
+    assert H._type_bytes("(bf16[2,2], s8[16])") == 24
+    assert H._type_bytes("pred[]") == 1

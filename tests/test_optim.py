@@ -1,0 +1,68 @@
+"""Optimizer, schedule and gradient-compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.compression import compress_tree
+from repro.optim.schedule import cosine_schedule
+
+
+@pytest.mark.parametrize("moment_dtype", ["float32", "bfloat16", "int8"])
+def test_adamw_converges_quadratic(moment_dtype):
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, moment_dtype=moment_dtype)
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    state = adamw_init(params, cfg)
+    target = jnp.array([1.0, 1.0, 1.0])
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for step in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(g, state, params, cfg, 0.05)
+    assert float(loss(params)) < 1e-2
+
+
+def test_clip_norm():
+    cfg = AdamWConfig(clip_norm=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params, cfg)
+    g = {"w": jnp.full(4, 100.0)}
+    assert float(global_norm(g)) == pytest.approx(200.0)
+    p2, s2, gnorm = adamw_update(g, state, params, cfg, 0.0)
+    assert float(gnorm) == pytest.approx(200.0)
+
+
+def test_int8_state_shapes():
+    cfg = AdamWConfig(moment_dtype="int8")
+    params = {"w": jnp.zeros((13, 77))}  # 1001 elements: not a block multiple
+    state = adamw_init(params, cfg)
+    assert state["v"]["w"]["q"].dtype == jnp.int8
+    g = {"w": jnp.ones((13, 77))}
+    p2, s2, _ = adamw_update(g, state, params, cfg, 1e-3)
+    assert p2["w"].shape == (13, 77)
+    assert jnp.all(jnp.isfinite(p2["w"]))
+
+
+def test_cosine_schedule_shape():
+    lr0 = float(cosine_schedule(jnp.array(0), base_lr=1.0, warmup_steps=10,
+                                total_steps=100))
+    lr_w = float(cosine_schedule(jnp.array(10), base_lr=1.0, warmup_steps=10,
+                                 total_steps=100))
+    lr_end = float(cosine_schedule(jnp.array(100), base_lr=1.0,
+                                   warmup_steps=10, total_steps=100))
+    assert lr0 < 0.2
+    assert lr_w == pytest.approx(1.0, abs=0.02)
+    assert lr_end == pytest.approx(0.1, abs=0.02)  # min_ratio
+
+
+def test_compress_tree_error_feedback_residual():
+    g = {"a": jnp.linspace(-2, 2, 300), "b": jnp.ones((5, 5))}
+    q, resid = compress_tree(g)
+    # residual should be smaller than one quant step everywhere
+    for k in g:
+        assert float(jnp.max(jnp.abs(resid[k]))) <= float(
+            jnp.max(jnp.abs(g[k]))
+        ) / 127.0 * 1.01 + 1e-7

@@ -1,0 +1,91 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import segregation as seg
+from repro.core import transpose_conv as tc
+from repro.kernels import ref
+from repro.optim.compression import compress_int8, decompress_int8
+from repro.data import SyntheticTokens
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    n_in=st.integers(2, 9),
+    n_k=st.integers(2, 6),
+    pad=st.integers(0, 3),
+    cin=st.integers(1, 3),
+    cout=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_unified_equals_conventional(n_in, n_k, pad, cin, cout, seed):
+    """The paper's core exactness claim: segregated == conventional for every
+    (input, kernel, padding)."""
+    if 2 * n_in - n_k + 2 * pad <= 0:
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, n_in, n_in, cin)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(n_k, n_k, cin, cout)).astype(np.float32))
+    want = ref.conventional_ref(x, k, pad)
+    got = tc.transpose_conv2d(x, k, pad, method="unified")
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@given(n_in=st.integers(2, 8), n_k=st.integers(2, 6))
+@settings(**SETTINGS)
+def test_flop_count_counts_real_multiplies(n_in, n_k):
+    """flop_count(segregated, P=0) == number of kernel taps hitting a
+    non-structural-zero upsample position, brute-forced. (For P>0 the phase
+    convolutions also multiply over border-padding zeros, matching what the
+    implementation executes — covered by the ratio tests.)"""
+    if 2 * n_in - n_k <= 0:
+        return
+    m = seg.output_size(n_in, n_k, 0)
+    total = 0
+    up = np.zeros((2 * n_in - 1,) * 2, bool)
+    up[::2, ::2] = True
+    for x in range(m):
+        for y in range(m):
+            total += int(up[x : x + n_k, y : y + n_k].sum())
+    assert total == seg.flop_count(n_in, n_k, 1, 1, 0, method="segregated")
+
+
+@given(
+    shape=st.tuples(st.integers(1, 5), st.integers(1, 65)),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 1e3),
+)
+@settings(**SETTINGS)
+def test_int8_compression_bounded_error(shape, seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.normal(size=shape) * scale).astype(np.float32))
+    q, s = compress_int8(x)
+    back = decompress_int8(q, s, x.shape)
+    # block-wise absmax int8: error <= blockmax/127 per element
+    bound = float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+    assert float(jnp.max(jnp.abs(back - x))) <= bound * 1.01
+
+
+@given(step=st.integers(0, 10_000), seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_data_deterministic(step, seed):
+    d = SyntheticTokens(vocab_size=512, seq_len=16, global_batch=4, seed=seed)
+    a = d.batch(step)
+    b = d.batch(step)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 512
+
+
+@given(
+    n=st.integers(1, 6), seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_segregate_merge_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
+    subs = seg.segregate_kernel(k)
+    np.testing.assert_array_equal(seg.merge_subkernels(subs, n), k)

@@ -1,0 +1,97 @@
+"""Unit tests for the kernel-segregation algebra (paper §3.1-3.2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import segregation as seg
+
+
+def test_subkernel_shapes_5x5():
+    k = jnp.arange(25.0).reshape(5, 5)
+    subs = seg.segregate_kernel(k)
+    # paper Fig. 4: 9 / 6 / 6 / 4 elements
+    assert subs.k00.shape == (3, 3)
+    assert subs.k01.shape == (3, 2)
+    assert subs.k10.shape == (2, 3)
+    assert subs.k11.shape == (2, 2)
+
+
+def test_subkernel_shapes_even():
+    k = jnp.zeros((4, 4))
+    subs = seg.segregate_kernel(k)
+    for s in subs:
+        assert s.shape == (2, 2)  # even kernels: four equal sub-kernels
+
+
+def test_merge_roundtrip():
+    rng = np.random.default_rng(0)
+    for n in (2, 3, 4, 5, 7):
+        k = jnp.asarray(rng.normal(size=(n, n, 3, 2)).astype(np.float32))
+        subs = seg.segregate_kernel(k)
+        np.testing.assert_array_equal(seg.merge_subkernels(subs, n), k)
+
+
+def test_stacked_padding_is_zero():
+    rng = np.random.default_rng(1)
+    k = jnp.asarray(rng.normal(size=(5, 5)).astype(np.float32))
+    stacked = seg.stack_subkernels(k)
+    assert stacked.shape == (4, 3, 3)
+    # k11 is 2x2 padded to 3x3: the pad row/col must be exactly zero
+    np.testing.assert_array_equal(stacked[3, 2, :], np.zeros(3))
+    np.testing.assert_array_equal(stacked[3, :, 2], np.zeros(3))
+
+
+def test_phase_extents_partition_output():
+    for m in range(1, 12):
+        rows = [seg.phase_extent(m, p) for p in (0, 1)]
+        assert sum(rows) == m
+
+
+def test_plan_phases_in_bounds():
+    for n_in in (3, 4, 8):
+        for n_k in (2, 3, 4, 5):
+            for pad in (0, 1, 2, 3):
+                if 2 * n_in - n_k + 2 * pad <= 0:
+                    continue
+                plans, lo, hi = seg.plan_phases(n_in, n_k, pad)
+                size = n_in + lo + hi
+                for pl in plans:
+                    assert pl.row0 >= 0 and pl.col0 >= 0
+                    R, C = seg.subkernel_shape(n_k, pl.kr, pl.kc)
+                    assert pl.row0 + pl.rows - 1 + R - 1 < size
+                    assert pl.col0 + pl.cols - 1 + C - 1 < size
+
+
+def test_odd_padding_swaps_subkernels():
+    # paper §3.4: odd P uses k11,k10,k01,k00 order
+    assert seg.phase_params(0, 1) == 1
+    assert seg.phase_params(1, 1) == 0
+    assert seg.phase_params(0, 2) == 0
+
+
+def test_flop_count_matches_paper_ratio():
+    """Paper: 25 effective multiplies produce four outputs vs 100 for the
+    conventional approach (4x reduction, §3.1)."""
+    conv = seg.flop_count(8, 5, 1, 1, 0, method="conventional")
+    segd = seg.flop_count(8, 5, 1, 1, 0, method="segregated")
+    assert conv / segd == pytest.approx(4.0, rel=0.15)
+
+
+def test_flop_count_exact_even_kernel():
+    """Even kernels: exactly 4x fewer MACs (all sub-kernels dense)."""
+    conv = seg.flop_count(16, 4, 8, 16, 1, method="conventional")
+    segd = seg.flop_count(16, 4, 8, 16, 1, method="segregated")
+    assert conv == 4 * segd
+
+
+def test_memory_savings_matches_paper_table2():
+    # paper Table 2: 1.8279 MB for 224x224x3 inputs (P=2, diff convention)
+    b = seg.memory_savings_bytes(224, 3, 4, padding=2)
+    assert b == 152_325 * 12
+    assert b / 1e6 == pytest.approx(1.8279, rel=0.001)
+
+
+def test_memory_savings_matches_paper_table4():
+    # paper Table 4: 991,232 B for the 4x4x2048 EB-GAN layer (buffer conv.)
+    assert seg.memory_savings_bytes(4, 2048, 4, padding=2, mode="buffer") \
+        == 991_232

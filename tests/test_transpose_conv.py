@@ -1,0 +1,84 @@
+"""All transpose-conv methods vs the naive oracle, incl. gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import transpose_conv as tc
+from repro.kernels import ref
+
+METHODS = ["conventional", "xla", "grouped", "unified", "unified_reshape",
+           "unified_fused", "unified_matmul", "auto"]
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+@pytest.mark.parametrize("n_in,n_k,pad", [
+    (3, 2, 0), (4, 3, 1), (5, 4, 2), (6, 5, 1), (4, 5, 3), (7, 3, 0),
+    (8, 4, 1), (5, 5, 2),
+])
+@pytest.mark.parametrize("method", METHODS)
+def test_methods_match_oracle(n_in, n_k, pad, method):
+    x = _rand((2, n_in, n_in, 3))
+    k = _rand((n_k, n_k, 3, 4))
+    want = ref.conventional_ref(x, k, pad)
+    got = tc.transpose_conv2d(x, k, pad, method=method)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_matches_segregated_oracle():
+    x = _rand((1, 6, 6, 2))
+    k = _rand((5, 5, 2, 3))
+    a = ref.unified_segregated_ref(x, k, 2)
+    b = tc.transpose_conv2d(x, k, 2, method="unified")
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_bfloat16():
+    x = _rand((1, 8, 8, 4)).astype(jnp.bfloat16)
+    k = _rand((4, 4, 4, 8)).astype(jnp.bfloat16)
+    want = tc.transpose_conv2d(
+        x.astype(jnp.float32), k.astype(jnp.float32), 1, method="conventional"
+    )
+    got = tc.transpose_conv2d(x, k, 1, method="unified").astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=0.05, atol=0.05)
+
+
+def test_gradients_match_conventional():
+    x = _rand((2, 5, 5, 2))
+    k = _rand((4, 4, 2, 3))
+
+    def loss(method):
+        def f(x, k):
+            y = tc.transpose_conv2d(x, k, 1, method=method)
+            return jnp.sum(y * y)
+        return jax.grad(f, argnums=(0, 1))(x, k)
+
+    gconv = loss("conventional")
+    guni = loss("unified")
+    for a, b in zip(gconv, guni):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_upsample_bed_of_nails():
+    x = jnp.arange(4.0).reshape(1, 2, 2, 1)
+    up = tc.upsample_bed_of_nails(x)
+    assert up.shape == (1, 3, 3, 1)
+    assert up[0, 0, 0, 0] == 0.0 and up[0, 2, 2, 0] == 3.0
+    assert up[0, 1, 1, 0] == 0.0  # inserted zero
+
+
+def test_output_size_paper_fig2():
+    # paper Fig. 2: 4x4 input, 3x3 kernel -> (2N-n) = 5
+    x = _rand((1, 4, 4, 1))
+    k = _rand((3, 3, 1, 1))
+    assert tc.transpose_conv2d(x, k, 0, method="unified").shape == (1, 5, 5, 1)
+
+
+def test_unknown_method_raises():
+    with pytest.raises(ValueError):
+        tc.transpose_conv2d(_rand((1, 4, 4, 1)), _rand((3, 3, 1, 1)),
+                            method="nope")
