@@ -1,23 +1,11 @@
-"""Shared benchmark utilities: wall-time measurement of jit'd callables."""
+"""Shared benchmark utilities (timing lives in repro.timing — one harness
+for benchmarks and the autotuner, so their numbers stay comparable)."""
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-
-def time_fn(fn, *args, repeats=5, warmup=2):
-    """Median wall time (seconds) of fn(*args) with block_until_ready."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+from repro.timing import time_fn  # noqa: F401  (re-export)
 
 
 def rand_image(key, hw=224, c=3, batch=1):

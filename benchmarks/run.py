@@ -1,11 +1,31 @@
-# One function per paper table. Prints CSV blocks per table plus the
-# roofline table derived from the dry-run artifacts (if present).
+# One function per paper table, plus the transpose-conv perf-trajectory
+# artifact (BENCH_transpose_conv.json). Prints CSV blocks per table.
+#
+#   python -m benchmarks.run            # full sweep (all tables + artifact)
+#   python -m benchmarks.run --quick    # CI smoke: artifact only, <60 s
 from __future__ import annotations
 
+import argparse
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="smoke mode for CI: quick transpose-conv benchmark only",
+    )
+    args = ap.parse_args(argv)
+
+    from benchmarks import transpose_conv_bench
+
+    if args.quick:
+        t0 = time.time()
+        print("\n===== transpose_conv_bench (quick) =====")
+        transpose_conv_bench.main(["--quick", "--check"])
+        print(f"[transpose_conv_bench] {time.time() - t0:.1f}s")
+        return
+
     from benchmarks import (
         flops_memory,
         roofline_table,
@@ -25,6 +45,11 @@ def main() -> None:
         print(f"\n===== {name} =====")
         mod.main()
         print(f"[{name}] {time.time() - t0:.1f}s")
+
+    t0 = time.time()
+    print("\n===== transpose_conv_bench =====")
+    transpose_conv_bench.main(["--check"])
+    print(f"[transpose_conv_bench] {time.time() - t0:.1f}s")
 
 
 if __name__ == "__main__":

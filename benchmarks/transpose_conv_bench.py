@@ -1,0 +1,166 @@
+"""Per-layer transpose-conv benchmark over the Table-4 GAN layers.
+
+Emits ``BENCH_transpose_conv.json`` — the perf-trajectory artifact future PRs
+compare against. Per layer it records:
+
+* wall-clock seconds for every lax-based method (conventional, unified,
+  unified_reshape, unified_matmul, unified_fused) plus the tuned ``auto``
+  dispatch;
+* FLOP/byte roofline-proxy seconds for the two Pallas grids (on CPU they only
+  run interpreted, so wall clock would time the Python interpreter — the
+  proxy is the backend-honest comparison; on a real TPU backend both are
+  also wall-clocked);
+* ``fused_vs_phase``: the fused kernel's speedup over the per-phase grid
+  (must be >= 1 on every layer — checked by ``--check`` and CI).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.transpose_conv_bench [--quick]
+        [--out BENCH_transpose_conv.json] [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+
+from benchmarks.common import time_fn
+
+FULL_METHODS = (
+    "conventional", "unified", "unified_reshape", "unified_matmul",
+    "unified_fused", "auto",
+)
+QUICK_METHODS = ("conventional", "unified_reshape", "auto")
+
+
+def bench_layer(hw, cin, cout, kernel, padding, methods, *, repeats, warmup):
+    import jax.numpy as jnp
+
+    from repro.core import transpose_conv2d
+    from repro.kernels import autotune
+
+    x = jax.random.normal(jax.random.key(hw), (1, hw, hw, cin))
+    k = jax.random.normal(
+        jax.random.key(hw + 1), (kernel, kernel, cin, cout)
+    ) * 0.05
+
+    wall = {}
+    want = None
+    for m in methods:
+        fn = jax.jit(
+            lambda x, k, _m=m: transpose_conv2d(x, k, padding, method=_m)
+        )
+        got = fn(x, k)
+        if want is None:
+            want = got
+        else:  # all methods compute the same operator
+            assert float(jnp.max(jnp.abs(got - want))) < 1e-3, m
+        wall[m] = time_fn(fn, x, k, repeats=repeats, warmup=warmup)
+
+    fused_s, (tile_h, tile_w) = autotune.best_fused_proxy(
+        1, hw, kernel, cin, cout, padding
+    )
+    proxy = {
+        "pallas_fused": fused_s,
+        "pallas_phase": autotune.roofline_proxy(
+            "pallas_phase", 1, hw, kernel, cin, cout, padding
+        ),
+    }
+    if jax.default_backend() == "tpu":  # compiled kernels: real wall clock
+        from repro.kernels.transpose_conv2d import (
+            transpose_conv2d_pallas, transpose_conv2d_pallas_phase,
+        )
+
+        wall["pallas_fused"] = time_fn(
+            jax.jit(lambda x, k: transpose_conv2d_pallas(
+                x, k, padding, tile_h=tile_h, tile_w=tile_w
+            )), x, k, repeats=repeats, warmup=warmup,
+        )
+        wall["pallas_phase"] = time_fn(
+            jax.jit(lambda x, k: transpose_conv2d_pallas_phase(x, k, padding)),
+            x, k, repeats=repeats, warmup=warmup,
+        )
+        fused_vs_phase = wall["pallas_phase"] / wall["pallas_fused"]
+    else:
+        fused_vs_phase = proxy["pallas_phase"] / proxy["pallas_fused"]
+    return {
+        "layer": f"{hw}x{hw}x{cin}",
+        "hw": hw, "cin": cin, "cout": cout,
+        "wall_s": wall,
+        "proxy_s": proxy,
+        "fused_tile": [tile_h, tile_w],
+        "fused_vs_phase": fused_vs_phase,
+    }
+
+
+def run(quick: bool = False) -> dict:
+    from repro.models.gan import GAN_ZOO
+
+    methods = QUICK_METHODS if quick else FULL_METHODS
+    repeats, warmup = (2, 1) if quick else (5, 2)
+    models = list(GAN_ZOO)[:1] if quick else list(GAN_ZOO)
+
+    out = {
+        "schema": "repro/bench_transpose_conv/v1",
+        "backend": jax.default_backend(),
+        "quick": quick,
+        "methods": list(methods),
+        "models": {},
+    }
+    for name in models:
+        cfg = GAN_ZOO[name]
+        rows = [
+            bench_layer(
+                hw, cin, cout, cfg.kernel, cfg.padding, methods,
+                repeats=repeats, warmup=warmup,
+            )
+            for hw, cin, cout in cfg.layers
+        ]
+        totals = {
+            m: sum(r["wall_s"][m] for r in rows) for m in rows[0]["wall_s"]
+        }
+        out["models"][name] = {"layers": rows, "totals": totals}
+    return out
+
+
+def check(result: dict) -> list[str]:
+    """The acceptance gate: fused >= per-phase on every Table-4 layer."""
+    bad = []
+    for name, model in result["models"].items():
+        for row in model["layers"]:
+            if row["fused_vs_phase"] < 1.0:
+                bad.append(f"{name}/{row['layer']}: {row['fused_vs_phase']:.3f}")
+    return bad
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke subset: dcgan only, 3 methods, 2 repeats")
+    ap.add_argument("--out", default="BENCH_transpose_conv.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless fused >= per-phase everywhere")
+    args = ap.parse_args(argv)
+
+    result = run(quick=args.quick)
+    Path(args.out).write_text(json.dumps(result, indent=1, sort_keys=True))
+    print(f"# wrote {args.out} (backend={result['backend']}, "
+          f"quick={result['quick']})")
+    print("model,layer,auto_s,best_wall_method,fused_vs_phase")
+    for name, model in result["models"].items():
+        for row in model["layers"]:
+            best = min(row["wall_s"], key=row["wall_s"].get)
+            print(f"{name},{row['layer']},{row['wall_s']['auto']:.5f},"
+                  f"{best},{row['fused_vs_phase']:.3f}")
+    bad = check(result)
+    if bad:
+        print("FUSED REGRESSION vs per-phase on:", "; ".join(bad))
+        if args.check:
+            raise SystemExit(1)
+    elif args.check:
+        print("# check ok: fused >= per-phase on every layer")
+
+
+if __name__ == "__main__":
+    main()

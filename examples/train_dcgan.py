@@ -22,8 +22,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--method", default="unified",
-                    choices=["unified", "conventional", "pallas"])
+    ap.add_argument("--method", default="auto",
+                    choices=["auto", "unified", "conventional", "pallas",
+                             "pallas_phase"],
+                    help="'auto' consults the autotuner cache per layer "
+                         "(repro.kernels.autotune; napkin-rule fallback)")
     args = ap.parse_args()
 
     # reduced DC-GAN (channels/16) => 32x32 outputs, CPU-friendly

@@ -196,11 +196,39 @@ def transpose_conv_unified_reshape(x, kernel, padding: int = 0, *,
 
 
 def transpose_conv_auto(x, kernel, padding: int = 0, *, precision=None):
-    """Autotuned method selection (the §Perf napkin rule, validated by
-    measurement): the segregated form wins whenever the per-phase GEMM has
-    enough rows (M = ceil(out/2)^2); below that (the 4x4/8x8 GAN head
-    layers at batch 1) the single big conventional GEMM is faster on CPU
-    because XLA's skinny-M GEMM efficiency collapses."""
+    """Measured per-layer method selection (HUGE²-style dispatch).
+
+    Consults the persistent autotuner cache (:mod:`repro.kernels.autotune`)
+    for this exact (backend, batch, N, n, Cin, Cout, P, dtype) layer shape —
+    a hit dispatches to the measured winner (including the Pallas kernels,
+    which keep their custom VJP via :mod:`repro.kernels.ops`). Cold cache
+    falls back to the old §Perf napkin rule: the segregated form wins
+    whenever the per-phase GEMM has enough rows (M = ceil(out/2)^2); below
+    that (the 4x4/8x8 GAN head layers at batch 1) the single big
+    conventional GEMM is faster on CPU because XLA's skinny-M GEMM
+    efficiency collapses.
+    """
+    from repro.kernels import autotune
+
+    entry = autotune.best_method(
+        x.shape[0], x.shape[1], kernel.shape[0], kernel.shape[2],
+        kernel.shape[3], padding, str(x.dtype),
+    )
+    if entry is not None:
+        method = entry["method"]
+        if method.startswith("pallas"):
+            from repro.kernels import ops
+
+            if method == "pallas_phase":
+                return ops.transpose_conv2d_pallas_phase(x, kernel, padding)
+            return ops.transpose_conv2d_pallas(
+                x, kernel, padding,
+                entry.get("tile_h"), entry.get("tile_w"),
+            )
+        fn = METHODS.get(method)
+        if fn is not None and fn is not transpose_conv_auto:
+            return fn(x, kernel, padding, precision=precision)
+    # cold cache: the old napkin rule
     m = seg.output_size(x.shape[1], kernel.shape[0], padding)
     if (m + 1) // 2 >= 8:
         return transpose_conv_unified_reshape(
@@ -270,7 +298,6 @@ METHODS = {
 }
 
 
-@functools.partial(jax.jit, static_argnames=("padding", "method", "precision"))
 def transpose_conv2d(
     x: jnp.ndarray,
     kernel: jnp.ndarray,
@@ -279,13 +306,50 @@ def transpose_conv2d(
     method: str = "unified",
     precision=None,
 ) -> jnp.ndarray:
-    """Stride-2 transpose convolution, paper semantics. See module docstring."""
-    if method == "pallas":  # local import: keep Pallas optional at import time
+    """Stride-2 transpose convolution, paper semantics. See module docstring.
+
+    For ``method="auto"`` the autotuner cache *generation* is part of the jit
+    key: tuning within a live process invalidates previously traced dispatch
+    decisions instead of silently keeping the stale winner.
+    """
+    epoch = 0
+    if method == "auto":
+        from repro.kernels import autotune
+
+        epoch = autotune.generation()
+    return _transpose_conv2d_jit(
+        x, kernel, padding, method=method, precision=precision,
+        _dispatch_epoch=epoch,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("padding", "method", "precision", "_dispatch_epoch"),
+)
+def _transpose_conv2d_jit(
+    x: jnp.ndarray,
+    kernel: jnp.ndarray,
+    padding: int = 0,
+    *,
+    method: str = "unified",
+    precision=None,
+    _dispatch_epoch: int = 0,
+) -> jnp.ndarray:
+    # local imports: keep Pallas optional at import time
+    if method in ("pallas", "pallas_fused"):
         from repro.kernels import ops
 
         return ops.transpose_conv2d_pallas(x, kernel, padding)
+    if method == "pallas_phase":
+        from repro.kernels import ops
+
+        return ops.transpose_conv2d_pallas_phase(x, kernel, padding)
     try:
         fn = METHODS[method]
     except KeyError:
-        raise ValueError(f"unknown method {method!r}; one of {sorted(METHODS)} or 'pallas'")
+        raise ValueError(
+            f"unknown method {method!r}; one of {sorted(METHODS)}, "
+            "'pallas'/'pallas_fused', or 'pallas_phase'"
+        )
     return fn(x, kernel, padding, precision=precision)

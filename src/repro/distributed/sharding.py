@@ -55,8 +55,73 @@ def batch_axes() -> tuple:
     return ("pod", "data", "model") if _MODE["mode"] == "fsdp" else BATCH
 
 
+def get_abstract_mesh():
+    """``jax.sharding.get_abstract_mesh``, portable across JAX versions.
+
+    Newer JAX exposes it under ``jax.sharding``; 0.4.x only has it in
+    ``jax._src.mesh``. Either way an *empty* mesh (no axes) normalizes to
+    ``None`` so callers can treat "no mesh" uniformly. Tests monkeypatch
+    ``jax.sharding.get_abstract_mesh``, which is checked first.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        from jax._src import mesh as mesh_lib
+
+        fn = getattr(mesh_lib, "get_abstract_mesh", None)
+    mesh = fn() if fn is not None else None
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        return None
+    return mesh
+
+
+def abstract_mesh(axis_sizes: tuple, axis_names: tuple):
+    """Construct an ``AbstractMesh`` across the two historical signatures:
+    ``AbstractMesh(sizes, names)`` (new) vs ``AbstractMesh(((name, size), ...))``
+    (JAX 0.4.x). Used by tests and the dry-run launcher."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` for sharded execution, portable
+    across JAX versions (``jax.sharding.use_mesh`` / ``jax.set_mesh`` /
+    ``jax._src.mesh.set_mesh``)."""
+    fn = getattr(jax.sharding, "use_mesh", None) or getattr(
+        jax, "set_mesh", None
+    )
+    if fn is not None:
+        return fn(mesh)
+
+    import contextlib
+
+    from jax._src import mesh as mesh_lib
+
+    @contextlib.contextmanager
+    def _set(mesh):
+        # 0.4.x: activate the mesh WITHOUT the sharding_in_types config flag
+        # that mesh_lib.set_mesh flips (half-built in 0.4.37 — tracing dies
+        # on avals lacking .sharding). The plain `with mesh:` thread-resource
+        # context is what 0.4.x with_sharding_constraint reads.
+        with mesh, mesh_lib.set_abstract_mesh(mesh.abstract_mesh), \
+                mesh_lib.set_concrete_mesh(mesh):
+            yield
+
+    return _set(mesh)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    """{axis name: size} for a (possibly abstract) mesh."""
+    if mesh is None:
+        return {}
+    return dict(zip(tuple(mesh.axis_names), tuple(mesh.shape.values())))
+
+
 def _mesh_axes() -> tuple:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     return tuple(mesh.axis_names) if mesh is not None else ()
 
 
@@ -64,9 +129,9 @@ def _filter(spec: P, shape=None) -> P | None:
     """Drop spec entries whose axes aren't in the active mesh, or whose mesh
     extent doesn't divide the tensor dim (forcing XLA into involuntary full
     rematerialization / padded reshards); None if nothing remains."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     axes = tuple(mesh.axis_names) if mesh is not None else ()
-    sizes = dict(zip(axes, mesh.shape.values())) if axes else {}
+    sizes = mesh_axis_sizes(mesh)
 
     def axis_size(entry):
         if isinstance(entry, tuple):

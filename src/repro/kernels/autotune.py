@@ -1,0 +1,404 @@
+"""Benchmark-driven per-layer operator selection with a persistent cache.
+
+The dispatch problem created by having many mathematically-identical
+transpose-conv implementations (conventional / unified_reshape /
+unified_matmul / unified_fused / pallas_phase / pallas_fused) is the one
+HUGE² (arXiv:1907.11210) solves with *measured* per-layer operator selection:
+no napkin rule survives contact with real hardware, so the winner for a layer
+shape is decided by timing candidates on the machine at hand and remembered.
+
+Components:
+
+* :func:`tune_layer` — times every candidate for one layer shape (several
+  spatial-tile variants for the fused Pallas kernel) and records the winner.
+* A persistent JSON cache keyed by ``(backend, batch, N, n, Cin, Cout, P,
+  dtype)``; location from ``$REPRO_AUTOTUNE_CACHE`` (default
+  ``~/.cache/repro/autotune.json``). Concurrent writers last-write-win on an
+  atomic rename; the in-memory view reloads on file mtime change.
+* :func:`best_method` — cache-only consult used by
+  ``repro.core.transpose_conv.transpose_conv_auto`` at trace time: a hit
+  dispatches to the measured winner, a miss falls back to the old heuristic
+  (cold-cache behaviour is unchanged).
+* :func:`roofline_proxy` — analytic ``max(flops/peak_flops, bytes/peak_bw)``
+  seconds for the two Pallas grids. The lax-based candidates always race on
+  wall clock. The Pallas kernels race on wall clock only on a real
+  accelerator backend (and can then win dispatch); on CPU they only run in
+  interpret mode (Python-speed, not predictive of TPU), so there they are
+  *reported* via this proxy and never selected as the winner.
+
+Cache entry format (``docs/AUTOTUNE.md``)::
+
+    {"method": "unified_reshape",        # winner for dispatch
+     "time_s": 1.2e-4,                   # winner's measured seconds
+     "source": "measured",               # how the winner was picked
+     "tile_h": 8, "tile_w": 128,         # only for pallas_fused winners
+     "candidates": {"conventional": 3.4e-4, ...},   # wall-clock losers too
+     "proxy": {"pallas_fused": 1.1e-6, "pallas_phase": 2.9e-6}}
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import segregation as seg
+from repro.kernels.transpose_conv2d import default_tiles
+from repro.timing import time_fn as _time_fn
+
+# Nominal accelerator peaks for the roofline proxy (TPU v4-ish; only the
+# RATIO between candidates matters for selection, not the absolute numbers).
+PEAK_FLOPS = 275e12
+PEAK_BW = 1.2e12
+
+_CACHE_VERSION = 1
+# in-memory cache state; "generation" bumps whenever entries change (record,
+# clear, reload-from-disk) so 'auto' dispatch can retrace (see generation())
+_STATE: dict[str, Any] = {
+    "path": None, "mtime": -1.0, "entries": {}, "generation": 0,
+}
+
+# Spatial-tile variants raced for the fused Pallas kernel.
+_FUSED_TILES = ((8, 128), (16, 128), (8, 64), (32, 32))
+
+
+def cache_path() -> Path:
+    p = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if p:
+        return Path(p)
+    return Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+def layer_key(
+    b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int,
+    dtype: str = "float32", backend: str | None = None,
+) -> str:
+    backend = backend or jax.default_backend()
+    return (
+        f"{backend}|b{b}|n{n_in}|k{n_k}|ci{cin}|co{cout}|p{padding}|{dtype}"
+    )
+
+
+def _load() -> dict:
+    """Reload the persistent cache if the file changed since last read."""
+    path = cache_path()
+    if _STATE["path"] != str(path):
+        _STATE.update(path=str(path), mtime=-1.0, entries={})
+        _STATE["generation"] += 1
+    try:
+        mtime = path.stat().st_mtime
+    except OSError:
+        return _STATE["entries"]
+    if mtime != _STATE["mtime"]:
+        try:
+            blob = json.loads(path.read_text())
+            if blob.get("version") == _CACHE_VERSION:
+                _STATE["entries"] = blob.get("entries", {})
+            else:  # foreign version: don't pin stale entries as current
+                _STATE["entries"] = {}
+            _STATE["generation"] += 1
+        except (json.JSONDecodeError, OSError):
+            pass  # corrupt/unreadable cache: keep the in-memory view
+        _STATE["mtime"] = mtime
+    return _STATE["entries"]
+
+
+def _save() -> None:
+    path = cache_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    blob = {"version": _CACHE_VERSION, "entries": _STATE["entries"]}
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)  # atomic: concurrent tuners last-write-win
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    try:
+        _STATE["mtime"] = path.stat().st_mtime
+    except OSError:
+        pass
+
+
+def lookup(key: str) -> dict | None:
+    return _load().get(key)
+
+
+def record(key: str, entry: dict, *, persist: bool = True) -> None:
+    _load()
+    _STATE["entries"][key] = entry
+    _STATE["generation"] += 1
+    if persist:
+        _save()
+
+
+def clear_cache(*, memory_only: bool = False) -> None:
+    _STATE.update(mtime=-1.0, entries={})
+    _STATE["generation"] += 1
+    if not memory_only:
+        try:
+            cache_path().unlink()
+        except OSError:
+            pass
+
+
+def generation() -> int:
+    """Monotonic counter that changes whenever the cache content changes.
+
+    ``transpose_conv2d`` threads this through as a static jit argument for
+    ``method="auto"``, so tuning *within* a process invalidates previously
+    traced dispatch decisions instead of silently keeping the stale winner.
+    """
+    _load()
+    return _STATE["generation"]
+
+
+def best_method(
+    b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int,
+    dtype: str = "float32",
+) -> dict | None:
+    """Cache-only consult (no measurement). Returns the entry or None."""
+    return lookup(layer_key(b, n_in, n_k, cin, cout, padding, dtype))
+
+
+# ------------------------------------------------------------------ roofline
+
+def _tile_geometry(
+    n_in: int, n_k: int, padding: int,
+    tile_h: int | None, tile_w: int | None,
+    cin: int, cout: int,
+):
+    m = seg.output_size(n_in, n_k, padding)
+    R = seg.ceil_half(n_k)
+    Hp = Wp = (m + 1) // 2
+    # tile defaults come from the kernel itself so the model can't drift
+    dth, dtw, ct, ci = default_tiles(n_in, n_k, padding, cin, cout)
+    th = min(tile_h or dth, Hp)
+    tw = min(tile_w or dtw, Wp)
+    n_h = -(-Hp // th)
+    n_w = -(-Wp // tw)
+    return m, R, Hp, Wp, th, tw, n_h, n_w, ct, ci
+
+
+def roofline_proxy(
+    method: str, b: int, n_in: int, n_k: int, cin: int, cout: int,
+    padding: int = 0, *, tile_h: int | None = None, tile_w: int | None = None,
+    dtype_bytes: int = 4,
+) -> float:
+    """Analytic seconds for the Pallas grids: max(compute, HBM traffic).
+
+    Models exactly what each grid moves per step: the per-phase kernel
+    re-fetches the full ``(Np, Np, ci)`` plane for every ``(phase, cout_tile,
+    cin_tile)`` step; the fused kernel fetches one halo'd spatial tile per
+    step and serves all four phases from it.
+    """
+    m, R, Hp, Wp, th, tw, n_h, n_w, ct, ci = _tile_geometry(
+        n_in, n_k, padding, tile_h, tile_w, cin, cout
+    )
+    n_co, n_ci = cout // ct, cin // ci
+    flops = 2 * b * seg.flop_count(n_in, n_k, cin, cout, padding)
+    # fp32 out blocks are written n_ci times and re-read (n_ci - 1) times
+    out_rw = (2 * n_ci - 1) * 4
+    if method in ("pallas_phase", "pallas-phase"):
+        np_ = n_in + n_k  # padded plane extent (upper bound)
+        in_b = b * 4 * n_co * n_ci * np_ * np_ * ci * dtype_bytes
+        w_b = b * 4 * n_co * n_ci * R * R * ci * ct * dtype_bytes
+        out_b = b * 4 * n_co * Hp * Wp * ct * out_rw
+    elif method in ("pallas_fused", "pallas-fused"):
+        steps = b * n_h * n_w * n_co * n_ci
+        in_b = steps * (th + R) * (tw + R) * ci * dtype_bytes
+        w_b = steps * 4 * R * R * ci * ct * dtype_bytes
+        out_b = b * n_h * n_w * n_co * th * tw * 4 * ct * out_rw
+    else:
+        raise ValueError(f"no roofline model for method {method!r}")
+    bytes_moved = in_b + w_b + out_b
+    return max(flops / PEAK_FLOPS, bytes_moved / PEAK_BW)
+
+
+def best_fused_proxy(
+    b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int = 0,
+    *, dtype_bytes: int = 4,
+) -> tuple[float, tuple[int, int]]:
+    """Best (seconds, (tile_h, tile_w)) over the fused-kernel tile variants."""
+    best = None
+    for th, tw in _FUSED_TILES:
+        t = roofline_proxy(
+            "pallas_fused", b, n_in, n_k, cin, cout, padding,
+            tile_h=th, tile_w=tw, dtype_bytes=dtype_bytes,
+        )
+        if best is None or t < best[0]:
+            best = (t, (th, tw))
+    return best
+
+
+# ------------------------------------------------------------------- tuning
+
+# lax-based candidates always race on wall clock
+LAX_CANDIDATES = (
+    "conventional", "unified_reshape", "unified_matmul", "unified_fused",
+)
+PALLAS_CANDIDATES = ("pallas_fused", "pallas_phase")
+DEFAULT_CANDIDATES = LAX_CANDIDATES + PALLAS_CANDIDATES
+
+
+def tune_layer(
+    b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int = 0,
+    *, dtype=jnp.float32, methods: tuple | None = None,
+    repeats: int = 3, warmup: int = 1, persist: bool = True,
+    include_pallas: bool | None = None,
+) -> dict:
+    """Measure candidates for one layer shape, record + return the winner.
+
+    ``methods`` filters the candidate set (default: every lax method plus
+    both Pallas kernels). include_pallas=None (auto): Pallas kernels race on
+    wall clock only on a real accelerator backend; on CPU they run in
+    interpret mode (wall clock would measure the Python interpreter, not the
+    operator), so there they are reported via the roofline proxy and never
+    become the winner.
+    """
+    from repro.core import transpose_conv as tc
+    from repro.kernels.transpose_conv2d import (
+        transpose_conv2d_pallas, transpose_conv2d_pallas_phase,
+    )
+
+    backend = jax.default_backend()
+    if include_pallas is None:
+        # the Pallas kernels are TPU-lowered (TPU compiler params, Unblocked
+        # indexing); everywhere else they only run interpreted
+        include_pallas = backend == "tpu"
+    methods = tuple(methods or DEFAULT_CANDIDATES)
+    lax_methods = tuple(m for m in methods if m not in PALLAS_CANDIDATES)
+    pallas_methods = tuple(m for m in methods if m in PALLAS_CANDIDATES)
+    if not lax_methods and not include_pallas:
+        raise ValueError(
+            f"nothing to wall-clock: methods={methods} names only Pallas "
+            f"kernels, which backend={backend!r} runs in interpret mode "
+            "(pass include_pallas=True to force, or add a lax method)"
+        )
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, n_in, n_in, cin)), dtype=dtype)
+    k = jnp.asarray(
+        rng.normal(size=(n_k, n_k, cin, cout)) * 0.05, dtype=dtype
+    )
+
+    candidates: dict[str, float] = {}
+    for name in lax_methods:
+        fn = jax.jit(
+            lambda x, k, _m=name: tc.transpose_conv2d(x, k, padding, method=_m)
+        )
+        candidates[name] = _time_fn(fn, x, k, repeats=repeats, warmup=warmup)
+
+    itemsize = jnp.dtype(dtype).itemsize
+    fused_s, (tile_h, tile_w) = best_fused_proxy(
+        b, n_in, n_k, cin, cout, padding, dtype_bytes=itemsize
+    )
+    proxy = {
+        "pallas_fused": fused_s,
+        "pallas_phase": roofline_proxy(
+            "pallas_phase", b, n_in, n_k, cin, cout, padding,
+            dtype_bytes=itemsize,
+        ),
+    }
+    if include_pallas:
+        for name in pallas_methods:
+            if name == "pallas_fused":
+                # race the tile variants for real, not just by proxy
+                times = {}
+                for th, tw in _FUSED_TILES:
+                    times[(th, tw)] = _time_fn(
+                        jax.jit(
+                            lambda x, k, _th=th, _tw=tw:
+                            transpose_conv2d_pallas(
+                                x, k, padding, tile_h=_th, tile_w=_tw
+                            )
+                        ),
+                        x, k, repeats=repeats, warmup=warmup,
+                    )
+                (tile_h, tile_w), best = min(
+                    times.items(), key=lambda kv: kv[1]
+                )
+                candidates[name] = best
+            else:
+                candidates[name] = _time_fn(
+                    jax.jit(
+                        lambda x, k: transpose_conv2d_pallas_phase(
+                            x, k, padding
+                        )
+                    ),
+                    x, k, repeats=repeats, warmup=warmup,
+                )
+
+    winner = min(candidates, key=candidates.get)
+    entry = {
+        "method": winner,
+        "time_s": candidates[winner],
+        "source": "measured",
+        "candidates": candidates,
+        "proxy": proxy,
+    }
+    if winner == "pallas_fused":
+        entry["tile_h"], entry["tile_w"] = tile_h, tile_w
+    key = layer_key(
+        b, n_in, n_k, cin, cout, padding, str(jnp.dtype(dtype)), backend
+    )
+    record(key, entry, persist=persist)
+    return entry
+
+
+def tune_gan_zoo(
+    *, batch: int = 1, repeats: int = 3, persist: bool = True
+) -> dict[str, dict]:
+    """Tune every distinct Table-4 GAN layer shape; returns {key: entry}."""
+    from repro.models.gan import GAN_ZOO
+
+    out = {}
+    seen = set()
+    for cfg in GAN_ZOO.values():
+        for hw, cin, cout in cfg.layers:
+            sig = (batch, hw, cfg.kernel, cin, cout, cfg.padding)
+            if sig in seen:
+                continue
+            seen.add(sig)
+            entry = tune_layer(*sig, repeats=repeats, persist=persist)
+            out[layer_key(*sig)] = entry
+    return out
+
+
+def main(argv=None):
+    """CLI: populate the persistent cache.
+
+    PYTHONPATH=src python -m repro.kernels.autotune --gan-zoo
+    PYTHONPATH=src python -m repro.kernels.autotune --layer 1 8 4 512 256 2
+    """
+    import argparse
+
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    g = ap.add_mutually_exclusive_group(required=True)
+    g.add_argument("--gan-zoo", action="store_true",
+                   help="tune every distinct Table-4 GAN layer shape")
+    g.add_argument("--layer", nargs=6, type=int,
+                   metavar=("B", "N", "K", "CIN", "COUT", "PAD"))
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    if args.gan_zoo:
+        entries = tune_gan_zoo(repeats=args.repeats)
+    else:
+        entry = tune_layer(*args.layer, repeats=args.repeats)
+        entries = {layer_key(*args.layer): entry}
+    print(f"# cache: {cache_path()}")
+    for key, e in entries.items():
+        extra = (f" tile={e['tile_h']}x{e['tile_w']}"
+                 if "tile_h" in e else "")
+        print(f"{key} -> {e['method']} ({e['time_s']:.6f}s){extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,12 @@
-"""Jit'd, differentiable wrappers around the Pallas transpose-conv kernel.
+"""Jit'd, differentiable wrappers around the Pallas transpose-conv kernels.
 
-The Pallas kernel implements the forward; the VJP is defined through the
-mathematically-identical lax implementation (`transpose_conv_unified`), so the
-op is trainable end-to-end (used by the GAN generators in models/gan.py).
+The Pallas kernels implement the forward (the phase-fused spatially-tiled
+kernel is the default; the legacy per-phase grid stays available as the
+autotuner baseline); the VJP of both is defined through the
+mathematically-identical lax implementation (`transpose_conv_unified`), so
+the ops are trainable end-to-end (used by the GAN generators in
+models/gan.py, including under the autotuned dispatch of
+``transpose_conv_auto``).
 """
 from __future__ import annotations
 
@@ -10,24 +14,57 @@ import functools
 
 import jax
 
-from repro.kernels.transpose_conv2d import transpose_conv2d_pallas as _pallas_fwd
+from repro.kernels.transpose_conv2d import (
+    transpose_conv2d_pallas as _pallas_fused_fwd,
+    transpose_conv2d_pallas_phase as _pallas_phase_fwd,
+)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def transpose_conv2d_pallas(x, kernel, padding: int = 0):
-    return _pallas_fwd(x, kernel, padding)
-
-
-def _fwd(x, kernel, padding):
-    return _pallas_fwd(x, kernel, padding), (x, kernel)
-
-
-def _bwd(padding, res, g):
+def _unified_vjp(padding, res, g):
     from repro.core.transpose_conv import transpose_conv_unified
 
     x, kernel = res
-    _, vjp = jax.vjp(lambda a, b: transpose_conv_unified(a, b, padding), x, kernel)
+    _, vjp = jax.vjp(
+        lambda a, b: transpose_conv_unified(a, b, padding), x, kernel
+    )
     return vjp(g)
 
 
-transpose_conv2d_pallas.defvjp(_fwd, _bwd)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def transpose_conv2d_pallas(
+    x, kernel, padding: int = 0, tile_h: int | None = None,
+    tile_w: int | None = None,
+):
+    """Phase-fused spatially-tiled Pallas forward, lax-unified backward.
+
+    tile_h/tile_w pin the spatial tiling (e.g. the autotuner's measured
+    winner); None uses the kernel's defaults.
+    """
+    return _pallas_fused_fwd(x, kernel, padding, tile_h=tile_h, tile_w=tile_w)
+
+
+def _fused_fwd(x, kernel, padding, tile_h, tile_w):
+    return (
+        _pallas_fused_fwd(x, kernel, padding, tile_h=tile_h, tile_w=tile_w),
+        (x, kernel),
+    )
+
+
+def _fused_bwd(padding, tile_h, tile_w, res, g):
+    return _unified_vjp(padding, res, g)
+
+
+transpose_conv2d_pallas.defvjp(_fused_fwd, _fused_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def transpose_conv2d_pallas_phase(x, kernel, padding: int = 0):
+    """Legacy per-phase-grid Pallas forward, lax-unified backward."""
+    return _pallas_phase_fwd(x, kernel, padding)
+
+
+def _phase_fwd(x, kernel, padding):
+    return _pallas_phase_fwd(x, kernel, padding), (x, kernel)
+
+
+transpose_conv2d_pallas_phase.defvjp(_phase_fwd, _unified_vjp)

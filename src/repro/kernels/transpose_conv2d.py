@@ -1,48 +1,246 @@
-"""Unified kernel-segregated transpose convolution as a single Pallas TPU kernel.
+"""Unified kernel-segregated transpose convolution as Pallas TPU kernels.
 
 TPU adaptation of the paper's CUDA mechanism (DESIGN.md §2): the runtime
-per-thread sub-kernel selection (``r = i%2, s = j%2``) becomes a **grid axis**
-— one ``pallas_call`` whose grid walks ``(batch, phase, cout_tile, cin_tile)``;
-the phase grid index statically selects which sub-kernel block the BlockSpec
-feeds the kernel and which interleaved output slice the result lands in. No
-data-dependent branching ever reaches the VPU/MXU.
+per-thread sub-kernel selection (``r = i%2, s = j%2``) is resolved at compile
+time. Two kernels live here:
 
-Layout decisions (why this is the TPU-native form):
+* :func:`transpose_conv2d_pallas` — the **phase-fused, spatially-tiled**
+  kernel (primary). One grid step loads ONE spatial input tile (with halo)
+  into VMEM and computes ALL FOUR phase accumulations from it.
+* :func:`transpose_conv2d_pallas_phase` — the earlier per-phase grid
+  (``phase`` as a grid axis), kept as the autotuner's baseline candidate.
 
-* The four sub-kernels are zero-padded to the common ``R = ceil(n/2)`` shape
-  and stacked to ``(4, R, R, Cin, Cout)``; the phase axis of the *weight*
-  BlockSpec does the paper's "runtime selection" at zero cost (compile-time
-  address arithmetic). For even ``n`` — every GAN layer in the paper's Table 4
-  — the padding is empty, so no wasted arithmetic at all.
-* The output is laid out ``(B, Hp, 2, Wp, 2, Cout)``; the trailing parity axes
-  make the stride-2 interleave ``out[2t+r, 2u+s]`` a *contiguous reshape*
-  rather than a scatter. ``Hp = ceil(M/2)`` is rounded up uniformly (idiomatic
-  TPU over-compute to aligned tiles); the final crop to ``M`` restores the
-  paper's "unified" exact-extent semantics. The upsampled bed-of-nails buffer
-  — the paper's memory cost — is never materialized.
-* Each grid step loads the input tile once into VMEM and reuses it across all
-  ``R*R`` taps; the taps are static slices feeding ``(Hp*Wp, Cin) @ (Cin, Ct)``
-  MXU matmuls, accumulated in fp32.
-* ``Cin``/``Cout`` are tiled (``cin`` innermost, revisiting the same output
-  block with a ``@pl.when(ci == 0)`` init) so the VMEM working set stays
-  bounded for wide layers; pick ``Ct``/``Ci`` multiples of 128 on real TPUs.
+Fused grid layout
+-----------------
 
-The kernel is validated on CPU in interpret mode against
+The grid is ``(batch, h_tile, w_tile, cout_tile, cin_tile)`` with
+``dimension_semantics = (parallel, parallel, parallel, parallel, arbitrary)``
+— only the innermost ``cin`` axis carries a loop dependency (it revisits the
+same output block with a ``@pl.when(ci == 0)`` init, so it must run in order).
+
+Input tiling + halo math: the four phases of the segregated transpose conv
+read the padded input at per-parity origins ``row0(pr), col0(pc)`` (see
+:func:`repro.core.segregation.plan_phases`); output phase-plane coordinates
+``t ∈ [0, Hp)`` are tiled by ``tile_h``. Grid step ``(b, i, j, co, ci)``
+therefore needs padded-input rows::
+
+    [min_row0 + i*tile_h,  max_row0 + i*tile_h + tile_h + R - 2]
+
+i.e. an input tile of ``tile_h + dr + (R - 1)`` rows where
+``dr = max_row0 - min_row0 ∈ {0, 1}`` is the cross-phase origin skew and
+``R - 1`` is the sub-kernel halo (``R = ceil(n/2)``). Consecutive spatial
+tiles *overlap* by the halo — expressed with an **Unblocked** input BlockSpec
+whose index map returns element offsets ``(b, min_row0 + i*tile_h, ...)``.
+Per grid step the input load is the halo'd tile only — never the full
+``(N, N)`` plane — so VMEM stays bounded in ``N`` and each input element is
+loaded once for all four phases: 4x the arithmetic intensity of the
+per-phase kernel's loads.
+
+The four sub-kernels are zero-padded to the common ``R x R`` shape and
+stacked to ``(4, R, R, Cin, Cout)``; the whole stack rides in VMEM and the
+output-parity -> sub-kernel selection (including the odd-padding swap,
+paper §3.4) is a static Python index into it. The output block is the
+interleaved ``(1, tile_h, 2, tile_w, 2, ct)`` slab of the
+``(B, Hp, 2, Wp, 2, Cout)`` layout whose trailing parity axes make the
+stride-2 interleave a contiguous reshape — the upsampled bed-of-nails
+buffer is never materialized.
+
+Inputs may be ``bf16`` (or ``fp32``); every tap is an MXU matmul with
+``preferred_element_type=float32``, so accumulation is always fp32.
+
+Both kernels are validated on CPU in interpret mode against
 :mod:`repro.kernels.ref` across shape/dtype/padding sweeps (tests/).
 """
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+try:  # TPU compiler params are optional (interpret mode ignores them)
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover - non-TPU builds of pallas
+    pltpu = None
+
 from repro.core import segregation as seg
 
 
-def _phase_kernel(x_ref, w_ref, o_ref, *, R, Hp, Wp, row0s, col0s, n_cin_tiles):
+def _phase_offsets(n_in: int, n_k: int, padding: int):
+    """Per-output-parity padded-input origins + the fused tile geometry.
+
+    Returns ``(row0s, col0s, pad_lo)`` where ``row0s[pr]`` is the first
+    padded-input row phase ``pr`` reads (likewise cols).
+    """
+    plans, pad_lo, _ = seg.plan_phases(n_in, n_k, padding)
+    row0s = (plans[0].row0, plans[2].row0)  # by output row parity
+    col0s = (plans[0].col0, plans[1].col0)  # by output col parity
+    return row0s, col0s, pad_lo
+
+
+def default_tiles(n_in: int, n_k: int, padding: int, cin: int, cout: int):
+    """Default (tile_h, tile_w, cout_tile, cin_tile) of the fused kernel.
+
+    The single source of the tile-default logic — the autotuner's roofline
+    model (repro.kernels.autotune) imports this so its geometry can never
+    drift from what the kernel actually runs.
+    """
+    m = seg.output_size(n_in, n_k, padding)
+    hp = (m + 1) // 2
+    return min(hp, 8), min(hp, 128), min(cout, 128), min(cin, 512)
+
+
+def _fused_kernel(x_ref, w_ref, o_ref, *, R, th, tw, roffs, coffs, wsels):
+    """One (batch, h_tile, w_tile, cout_tile, cin_tile) grid step: all four
+    phase accumulations from a single halo'd input tile."""
+    ci = pl.program_id(4)
+    x = x_ref[0]  # (th + dr + R - 1, tw + dc + R - 1, ci) VMEM tile
+    ct = o_ref.shape[-1]
+
+    planes = []
+    for pr in range(2):
+        for pc in range(2):
+            r0, c0 = roffs[pr], coffs[pc]  # static tile-local origin
+            wk = w_ref[wsels[2 * pr + pc]]  # (R, R, ci, ct) sub-kernel
+            acc = jnp.zeros((th * tw, ct), jnp.float32)
+            for p in range(R):
+                for q in range(R):
+                    window = x[
+                        r0 + p : r0 + p + th, c0 + q : c0 + q + tw, :
+                    ].reshape(th * tw, -1)
+                    acc += jnp.dot(
+                        window, wk[p, q], preferred_element_type=jnp.float32
+                    )
+            planes.append(acc.reshape(th, tw, ct))
+    # (pr, pc, t, u, c) -> interleaved block (1, t, pr, u, pc, c)
+    block = jnp.stack(planes).reshape(2, 2, th, tw, ct)
+    block = block.transpose(2, 0, 3, 1, 4)[None]
+
+    @pl.when(ci == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += block
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "padding", "tile_h", "tile_w", "cout_tile", "cin_tile", "interpret",
+    ),
+)
+def transpose_conv2d_pallas(
+    x: jnp.ndarray,
+    kernel: jnp.ndarray,
+    padding: int = 0,
+    *,
+    tile_h: int | None = None,
+    tile_w: int | None = None,
+    cout_tile: int | None = None,
+    cin_tile: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Phase-fused, spatially-tiled unified transpose conv (single launch).
+
+    x: (B, N, N, Cin) NHWC; kernel: (n, n, Cin, Cout) HWIO. Returns
+    (B, M, M, Cout) with M = 2N - n + 2*padding, fp32 (inputs may be bf16;
+    accumulation is fp32 either way).
+    """
+    if interpret is None:  # interpret=True on CPU so tests/benches run anywhere
+        interpret = jax.default_backend() == "cpu"
+    b, n_in, _, cin = x.shape
+    n_k = kernel.shape[0]
+    cout = kernel.shape[3]
+    m = seg.output_size(n_in, n_k, padding)
+    R = seg.ceil_half(n_k)
+    Hp = Wp = (m + 1) // 2
+
+    row0s, col0s, pad_lo = _phase_offsets(n_in, n_k, padding)
+    base_r, base_c = min(row0s), min(col0s)
+    dr, dc = max(row0s) - base_r, max(col0s) - base_c  # cross-phase skew
+
+    dth, dtw, dct, dci = default_tiles(n_in, n_k, padding, cin, cout)
+    th = min(tile_h or dth, Hp)
+    tw = min(tile_w or dtw, Wp)
+    n_h, n_w = pl.cdiv(Hp, th), pl.cdiv(Wp, tw)
+    hp, wp = n_h * th, n_w * tw  # rounded-up tiled extents
+
+    # pad so every tile's halo'd window is in-bounds (over-computed rows/cols
+    # read zeros and are cropped after the interleave reshape)
+    need_r = max(row0s) + hp + R - 1
+    need_c = max(col0s) + wp + R - 1
+    pad_hi_r = max(0, need_r - (n_in + pad_lo))
+    pad_hi_c = max(0, need_c - (n_in + pad_lo))
+    xp = jnp.pad(x, ((0, 0), (pad_lo, pad_hi_r), (pad_lo, pad_hi_c), (0, 0)))
+
+    w = seg.stack_subkernels(kernel)  # (4, R, R, Cin, Cout)
+    ct = cout_tile or dct
+    ci = cin_tile or dci
+    if cout % ct or cin % ci:
+        raise ValueError(f"cout={cout} % {ct} or cin={cin} % {ci} != 0")
+
+    # output parity -> stacked sub-kernel index (odd padding swaps roles)
+    wsels = tuple(
+        2 * ((pr + padding) % 2) + ((pc + padding) % 2)
+        for pr in range(2) for pc in range(2)
+    )
+    grid = (b, n_h, n_w, cout // ct, cin // ci)
+    compiler_params = None
+    if pltpu is not None:
+        # renamed TPUCompilerParams -> CompilerParams in newer JAX
+        params_cls = getattr(
+            pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+        )
+        if params_cls is not None:
+            compiler_params = params_cls(
+                dimension_semantics=(
+                    "parallel", "parallel", "parallel", "parallel",
+                    "arbitrary",
+                ),
+            )
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_kernel, R=R, th=th, tw=tw,
+            roffs=tuple(r - base_r for r in row0s),
+            coffs=tuple(c - base_c for c in col0s),
+            wsels=wsels,
+        ),
+        grid=grid,
+        in_specs=[
+            # halo'd spatial tile: overlapping windows -> Unblocked indexing
+            # (index map returns ELEMENT offsets, not block indices)
+            pl.BlockSpec(
+                (1, th + dr + R - 1, tw + dc + R - 1, ci),
+                lambda bb, ih, iw, co, cc: (
+                    bb, base_r + ih * th, base_c + iw * tw, cc * ci
+                ),
+                indexing_mode=pl.unblocked,
+            ),
+            pl.BlockSpec(
+                (4, R, R, ci, ct),
+                lambda bb, ih, iw, co, cc: (0, 0, 0, cc, co),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, th, 2, tw, 2, ct),
+            lambda bb, ih, iw, co, cc: (bb, ih, 0, iw, 0, co),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hp, 2, wp, 2, cout), jnp.float32),
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(xp, w)
+    return out.reshape(b, 2 * hp, 2 * wp, cout)[:, :m, :m, :]
+
+
+# --------------------------------------------------------------------------
+# Legacy per-phase kernel (phase as a grid axis). Each grid step reloads the
+# full spatial plane and computes ONE phase — 4x the input HBM traffic of the
+# fused kernel and VMEM unbounded in N. Kept as the autotuner's baseline
+# candidate ("pallas_phase") and as the perf reference for benchmarks.
+# --------------------------------------------------------------------------
+
+def _phase_kernel(x_ref, w_ref, o_ref, *, R, Hp, Wp, row0s, col0s):
     """One (batch, phase, cout-tile, cin-tile) grid step."""
     ph = pl.program_id(1)
     ci = pl.program_id(3)
@@ -75,7 +273,7 @@ def _phase_kernel(x_ref, w_ref, o_ref, *, R, Hp, Wp, row0s, col0s, n_cin_tiles):
 @functools.partial(
     jax.jit, static_argnames=("padding", "cout_tile", "cin_tile", "interpret")
 )
-def transpose_conv2d_pallas(
+def transpose_conv2d_pallas_phase(
     x: jnp.ndarray,
     kernel: jnp.ndarray,
     padding: int = 0,
@@ -84,12 +282,8 @@ def transpose_conv2d_pallas(
     cin_tile: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Unified kernel-segregated transpose conv, single Pallas launch.
-
-    x: (B, N, N, Cin) NHWC; kernel: (n, n, Cin, Cout) HWIO. Returns
-    (B, M, M, Cout) with M = 2N - n + 2*padding, fp32.
-    """
-    if interpret is None:  # interpret=True on CPU so tests/benches run anywhere
+    """Per-phase unified kernel-segregated transpose conv (legacy grid)."""
+    if interpret is None:
         interpret = jax.default_backend() == "cpu"
     b, n_in, _, cin = x.shape
     n_k = kernel.shape[0]
@@ -98,9 +292,7 @@ def transpose_conv2d_pallas(
     R = seg.ceil_half(n_k)
     Hp = Wp = (m + 1) // 2
 
-    plans, pad_lo, _ = seg.plan_phases(n_in, n_k, padding)
-    row0s = (plans[0].row0, plans[2].row0)  # by output row parity
-    col0s = (plans[0].col0, plans[1].col0)  # by output col parity
+    row0s, col0s, pad_lo = _phase_offsets(n_in, n_k, padding)
     # high-side pad so every phase's uniform (Hp + R - 1) window is in-bounds
     need = max(r0 for r0 in row0s + col0s) + Hp + R - 1
     pad_hi = max(0, need - (n_in + pad_lo))
@@ -112,13 +304,11 @@ def transpose_conv2d_pallas(
     ci = cin_tile or min(cin, 512)
     if cout % ct or cin % ci:
         raise ValueError(f"cout={cout} % {ct} or cin={cin} % {ci} != 0")
-    n_ci = cin // ci
 
-    grid = (b, 4, cout // ct, n_ci)
+    grid = (b, 4, cout // ct, cin // ci)
     out = pl.pallas_call(
         functools.partial(
             _phase_kernel, R=R, Hp=Hp, Wp=Wp, row0s=row0s, col0s=col0s,
-            n_cin_tiles=n_ci,
         ),
         grid=grid,
         in_specs=[

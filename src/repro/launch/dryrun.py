@@ -102,9 +102,11 @@ def cache_specs(cfg, cache_abstract, shape):
     (sequence parallelism); state dims over model.
     """
     long_ctx = shape.global_batch == 1
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.distributed.sharding import get_abstract_mesh, mesh_axis_sizes
+
+    mesh = get_abstract_mesh()
     axes = tuple(mesh.axis_names)
-    sizes = dict(zip(axes, mesh.shape.values()))
+    sizes = mesh_axis_sizes(mesh)
     dp = tuple(a for a in ("pod", "data") if a in axes)
     dp_n = 1
     for a in dp:
@@ -214,7 +216,9 @@ def _compile(cfg, shape, mesh, arch):
     t0 = time.time()
     batch_abs = input_specs(cfg, shape)
 
-    with jax.set_mesh(mesh):
+    from repro.distributed.sharding import use_mesh
+
+    with use_mesh(mesh):
         p_abs, o_abs = abstract_train_state(model, train_cfg)
         p_specs = param_specs(p_abs, cfg.fsdp)
         p_shard = jax.tree_util.tree_map(
@@ -268,6 +272,8 @@ def _compile(cfg, shape, mesh, arch):
 def _report(compiled, cfg, shape, mesh, arch, shape_name, timings, verbose):
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # 0.4.x returns [dict], newer a dict
+        cost = cost[0] if cost else None
     walk = hlo_analyze(compiled.as_text())  # trip-count-aware (per chip)
     n_chips = mesh.size
     report = {

@@ -14,8 +14,8 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
-from repro.core import transpose_conv2d
 from repro.core.segregation import flop_count, memory_savings_bytes
+from repro.models.layers import tconv_apply, tconv_init
 
 
 @dataclass(frozen=True)
@@ -63,23 +63,23 @@ def generator_init(key, cfg: GANConfig):
         }
     }
     for i, (hw, cin, cout) in enumerate(cfg.layers):
-        params[f"tconv{i}"] = {
-            "w": jax.random.normal(ks[i + 1], (cfg.kernel, cfg.kernel, cin, cout))
-            * (cfg.kernel * cfg.kernel * cin) ** -0.5,
-            "b": jnp.zeros((cout,)),
-        }
+        params[f"tconv{i}"] = tconv_init(ks[i + 1], cfg.kernel, cin, cout)
     return params
 
 
-def generator_apply(params, cfg: GANConfig, z, *, method: str = "unified"):
-    """z: (B, z_dim) -> image (B, H, W, C_last) in [-1, 1]."""
+def generator_apply(params, cfg: GANConfig, z, *, method: str = "auto"):
+    """z: (B, z_dim) -> image (B, H, W, C_last) in [-1, 1].
+
+    method="auto" (default) dispatches each layer through the autotuner
+    cache (repro.kernels.autotune) with the napkin rule as cold-cache
+    fallback; explicit methods pin every layer.
+    """
     h0, c0, _ = cfg.layers[0]
     x = (z @ params["proj"]["w"]).reshape(z.shape[0], h0, h0, c0)
     x = jax.nn.relu(x)
     n = len(cfg.layers)
     for i in range(n):
-        p = params[f"tconv{i}"]
-        x = transpose_conv2d(x, p["w"], cfg.padding, method=method) + p["b"]
+        x = tconv_apply(params[f"tconv{i}"], x, cfg.padding, method=method)
         x = jnp.tanh(x) if i == n - 1 else jax.nn.relu(x)
     return x
 

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.distributed import sharding
 from repro.distributed.sharding import BATCH, MODEL, constrain
 
 NEG_INF = -1e30
@@ -286,6 +287,31 @@ def init_kv_cache(cfg, batch, seq_len, abstract=False):
     return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
 
 
+# ----------------------------------------------- transpose conv (GAN stacks)
+
+def tconv_init(key, n, cin, cout, *, dtype=jnp.float32):
+    """n x n HWIO transpose-conv kernel + bias, fan-in scaled."""
+    return {
+        "w": (
+            jax.random.normal(key, (n, n, cin, cout)) * (n * n * cin) ** -0.5
+        ).astype(dtype),
+        "b": jnp.zeros((cout,), dtype),
+    }
+
+
+def tconv_apply(p, x, padding: int, *, method: str = "auto"):
+    """Stride-2 transpose convolution through the dispatch layer.
+
+    method="auto" consults the persistent autotuner cache per layer shape
+    (repro.kernels.autotune) — GAN training and the Table-4 benchmarks run
+    on whatever operator measured fastest on this backend, including the
+    fused Pallas kernel (whose custom VJP keeps this differentiable).
+    """
+    from repro.core import transpose_conv2d
+
+    return transpose_conv2d(x, p["w"], padding, method=method) + p["b"]
+
+
 # ------------------------------------------------------------- dense SwiGLU
 
 def mlp_init(key, cfg, d_ff=None):
@@ -328,10 +354,10 @@ def moe_init(key, cfg):
 
 def _dp_groups(batch: int) -> int:
     """Number of data-parallel shard groups the batch dim is split into."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = sharding.get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return 1
-    sizes = dict(zip(mesh.axis_names, mesh.shape.values()))
+    sizes = sharding.mesh_axis_sizes(mesh)
     g = 1
     for a in ("pod", "data"):
         g *= sizes.get(a, 1)
@@ -396,14 +422,18 @@ def _moe_shard_map(p, cfg, x):
     the data-dependent gather/scatter formulation (measured 51x wire-byte
     reduction on dbrx-132b train_4k)."""
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
 
-    mesh = jax.sharding.get_abstract_mesh()
+    try:  # moved to jax.shard_map after 0.4.x
+        from jax import shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+
+    mesh = sharding.get_abstract_mesh()
     axes = tuple(mesh.axis_names)
     dp = tuple(a for a in ("pod", "data") if a in axes)
     B, S, d = x.shape
     E, k, cf = cfg.moe.n_experts, cfg.moe.top_k, cfg.moe.capacity_factor
-    sizes = dict(zip(mesh.axis_names, mesh.shape.values()))
+    sizes = sharding.mesh_axis_sizes(mesh)
     model_n = sizes.get("model", 1)
     E_local = E // model_n
     fsdp = cfg.fsdp and "data" in axes
@@ -431,6 +461,12 @@ def _moe_shard_map(p, cfg, x):
         out = jax.lax.psum(out, "model")
         return out.reshape(xl.shape)
 
+    import inspect
+
+    params = inspect.signature(shard_map).parameters
+    no_rep_check = {
+        ("check_vma" if "check_vma" in params else "check_rep"): False
+    }
     out = shard_map(
         rank_fn,
         mesh=mesh,
@@ -440,7 +476,7 @@ def _moe_shard_map(p, cfg, x):
             P("model", f, None), P("model", f, None), P("model", None, f),
         ),
         out_specs=P(dp or None, None, None),
-        check_vma=False,
+        **no_rep_check,
     )(x, top_p.reshape(B, S, k), top_e.reshape(B, S, k), wg, wu, wd)
 
     out = out.reshape(B, S, d)
@@ -454,10 +490,10 @@ def _moe_shard_map(p, cfg, x):
 
 
 def _moe_supported_by_shard_map(cfg, batch):
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = sharding.get_abstract_mesh()
     if mesh is None or "model" not in tuple(mesh.axis_names):
         return False
-    sizes = dict(zip(mesh.axis_names, mesh.shape.values()))
+    sizes = sharding.mesh_axis_sizes(mesh)
     dp = 1
     for a in ("pod", "data"):
         dp *= sizes.get(a, 1)

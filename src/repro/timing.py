@@ -1,0 +1,24 @@
+"""Wall-time measurement of jit'd callables.
+
+Single source of truth for the timing harness — used by both the autotuner
+(repro.kernels.autotune) and the benchmarks/ package (benchmarks.common
+re-exports it), so their numbers stay comparable.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

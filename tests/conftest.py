@@ -1,7 +1,15 @@
 import os
 import sys
+import tempfile
 
 # Tests must see the single real CPU device (the 512-device flag is scoped to
 # the dry-run process only).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# Hermetic autotuner dispatch: never read a persistent cache — neither
+# ~/.cache/repro/autotune.json nor a developer-exported REPRO_AUTOTUNE_CACHE.
+# method="auto" must behave identically on every machine running the suite,
+# so the variable is force-overridden to a fresh per-run temp path.
+os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="repro-autotune-"), "autotune.json"
+)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

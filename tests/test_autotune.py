@@ -1,0 +1,162 @@
+"""Autotuner: persistent cache semantics, measured selection, tuned dispatch."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import transpose_conv as tc
+from repro.kernels import autotune, ref
+
+
+@pytest.fixture(autouse=True)
+def tmp_cache(tmp_path, monkeypatch):
+    """Every test gets its own persistent cache file."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+    autotune.clear_cache(memory_only=True)
+    yield
+    autotune.clear_cache(memory_only=True)
+
+
+def test_cache_roundtrip_persists_to_disk():
+    key = autotune.layer_key(1, 8, 4, 16, 8, 2)
+    autotune.record(key, {"method": "unified_reshape", "time_s": 1e-4,
+                          "source": "measured"})
+    # wipe the in-memory view; lookup must reload from the JSON file
+    autotune._STATE.update(mtime=-1.0, entries={})
+    entry = autotune.lookup(key)
+    assert entry is not None and entry["method"] == "unified_reshape"
+    blob = json.loads(autotune.cache_path().read_text())
+    assert blob["version"] == 1 and key in blob["entries"]
+
+
+def test_layer_key_includes_backend_and_dtype():
+    k1 = autotune.layer_key(1, 8, 4, 16, 8, 2, "float32", backend="cpu")
+    k2 = autotune.layer_key(1, 8, 4, 16, 8, 2, "bfloat16", backend="cpu")
+    k3 = autotune.layer_key(1, 8, 4, 16, 8, 2, "float32", backend="tpu")
+    assert len({k1, k2, k3}) == 3
+
+
+def test_tune_layer_records_measured_winner():
+    entry = autotune.tune_layer(1, 6, 4, 4, 4, 2, repeats=2, warmup=1)
+    assert entry["method"] in entry["candidates"]
+    assert entry["time_s"] == min(entry["candidates"].values()) > 0
+    # on CPU the Pallas kernels compete via the roofline proxy only
+    assert set(entry["proxy"]) == {"pallas_fused", "pallas_phase"}
+    # and the cache now answers for this exact shape
+    hit = autotune.best_method(1, 6, 4, 4, 4, 2)
+    assert hit is not None and hit["method"] == entry["method"]
+
+
+def test_auto_dispatch_consults_cache(monkeypatch):
+    calls = []
+    orig = autotune.best_method
+
+    def spy(*a, **kw):
+        calls.append(a)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(autotune, "best_method", spy)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 6, 6, 2)),
+                    dtype=jnp.float32)
+    k = jnp.asarray(np.random.default_rng(1).normal(size=(4, 4, 2, 3)),
+                    dtype=jnp.float32)
+    want = ref.conventional_ref(x, k, 2)
+    got = tc.transpose_conv_auto(x, k, 2)  # cold cache -> napkin fallback
+    assert calls, "transpose_conv_auto must consult the autotuner cache"
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("method", [
+    "conventional", "unified_matmul", "pallas_fused", "pallas_phase",
+])
+def test_auto_dispatch_follows_cached_winner(method):
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 6, 6, 2)),
+                    dtype=jnp.float32)
+    k = jnp.asarray(np.random.default_rng(1).normal(size=(4, 4, 2, 3)),
+                    dtype=jnp.float32)
+    key = autotune.layer_key(1, 6, 4, 2, 3, 2)
+    entry = {"method": method, "time_s": 0.0, "source": "test"}
+    if method == "pallas_fused":  # tuned tiles must reach the kernel
+        entry.update(tile_h=2, tile_w=3)
+    autotune.record(key, entry)
+    want = ref.conventional_ref(x, k, 2)
+    got = tc.transpose_conv_auto(x, k, 2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_tune_layer_pallas_only_on_cpu_raises_clearly():
+    """On CPU nothing in a Pallas-only candidate set can be wall-clocked —
+    that must be a clear error, not min() over an empty dict."""
+    with pytest.raises(ValueError, match="interpret mode"):
+        autotune.tune_layer(1, 6, 4, 4, 4, 2, methods=("pallas_fused",))
+
+
+def test_foreign_cache_version_resets_in_memory_view():
+    key = autotune.layer_key(1, 8, 4, 16, 8, 2)
+    autotune.record(key, {"method": "unified_reshape", "time_s": 1e-4,
+                          "source": "measured"})
+    # a newer tool rewrites the file with an unknown version
+    autotune.cache_path().write_text(json.dumps({"version": 99, "entries": {
+        key: {"method": "conventional"}
+    }}))
+    assert autotune.lookup(key) is None  # stale view must not be pinned
+
+
+def test_in_process_retuning_invalidates_auto_trace(monkeypatch):
+    """record() bumps the cache generation, which is part of the jit key for
+    method='auto' — new winners take effect without a process restart."""
+    calls = []
+    orig = autotune.best_method
+
+    def spy(*a, **kw):
+        calls.append(a)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(autotune, "best_method", spy)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 6, 6, 2)),
+                    dtype=jnp.float32)
+    k = jnp.asarray(np.random.default_rng(1).normal(size=(4, 4, 2, 3)),
+                    dtype=jnp.float32)
+    want = ref.conventional_ref(x, k, 2)
+
+    tc.transpose_conv2d(x, k, 2, method="auto")
+    n1 = len(calls)
+    assert n1 >= 1
+    tc.transpose_conv2d(x, k, 2, method="auto")  # same generation: cached
+    assert len(calls) == n1
+    autotune.record(
+        autotune.layer_key(1, 6, 4, 2, 3, 2),
+        {"method": "unified_matmul", "time_s": 0.0, "source": "test"},
+    )
+    got = tc.transpose_conv2d(x, k, 2, method="auto")  # bumped: retraces
+    assert len(calls) > n1
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_corrupt_cache_degrades_to_fallback():
+    autotune.cache_path().parent.mkdir(parents=True, exist_ok=True)
+    autotune.cache_path().write_text("{not json")
+    assert autotune.best_method(1, 6, 4, 2, 3, 2) is None
+    x = jnp.ones((1, 6, 6, 2), jnp.float32)
+    k = jnp.ones((4, 4, 2, 3), jnp.float32)
+    want = ref.conventional_ref(x, k, 2)
+    np.testing.assert_allclose(
+        tc.transpose_conv_auto(x, k, 2), want, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_roofline_fused_beats_phase_on_gan_layers():
+    """The fused grid moves ~4x less input traffic: the proxy must prefer it
+    on every Table-4 GAN layer shape."""
+    from repro.models.gan import GAN_ZOO
+
+    for cfg in GAN_ZOO.values():
+        for hw, cin, cout in cfg.layers:
+            fused, _tiles = autotune.best_fused_proxy(
+                1, hw, cfg.kernel, cin, cout, cfg.padding
+            )
+            phase = autotune.roofline_proxy(
+                "pallas_phase", 1, hw, cfg.kernel, cin, cout, cfg.padding
+            )
+            assert fused <= phase, (cfg.name, hw, cin, cout, fused, phase)

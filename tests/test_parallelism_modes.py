@@ -1,7 +1,7 @@
 """Parallelism-mode switch (tp vs fsdp/ZeRO-3) and attribution tooling."""
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 import pytest
 
 from repro.configs import get_config
@@ -11,8 +11,10 @@ from repro.models.lm import build_model
 
 @pytest.fixture
 def fake_mesh(monkeypatch):
-    mesh = AbstractMesh((16, 16), ("data", "model"))
-    monkeypatch.setattr(jax.sharding, "get_abstract_mesh", lambda: mesh)
+    mesh = sh.abstract_mesh((16, 16), ("data", "model"))
+    monkeypatch.setattr(
+        jax.sharding, "get_abstract_mesh", lambda: mesh, raising=False
+    )
     yield mesh
     sh.set_parallelism("tp")
 

@@ -1,7 +1,14 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+hypothesis is an optional dev dependency (requirements-dev.txt); the module
+skips cleanly where it's absent so bare environments still collect the suite.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import segregation as seg

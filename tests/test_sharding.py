@@ -1,7 +1,7 @@
 """Sharding rules: param specs, divisibility filtering, constrain no-op."""
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 import pytest
 
 from repro.configs import get_config
@@ -18,13 +18,16 @@ def test_constrain_noop_without_mesh():
 def _with_mesh(fn):
     """Run fn with a fake 16x16 production mesh visible to the rule engine
     (set_mesh requires real devices; the rules only read names/sizes)."""
-    mesh = AbstractMesh((16, 16), ("data", "model"))
-    orig = jax.sharding.get_abstract_mesh
+    mesh = sh.abstract_mesh((16, 16), ("data", "model"))
+    orig = getattr(jax.sharding, "get_abstract_mesh", None)
     jax.sharding.get_abstract_mesh = lambda: mesh
     try:
         return fn()
     finally:
-        jax.sharding.get_abstract_mesh = orig
+        if orig is None:
+            del jax.sharding.get_abstract_mesh
+        else:
+            jax.sharding.get_abstract_mesh = orig
 
 
 def test_param_specs_llama3():
