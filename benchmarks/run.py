@@ -3,6 +3,12 @@
 #
 #   python -m benchmarks.run            # full sweep (all tables + artifact)
 #   python -m benchmarks.run --quick    # CI smoke: artifact only, <60 s
+#
+# Quick mode smoke-runs forward, backward, AND full-train-step timings
+# (transpose_conv_bench --quick --check) and fails on the Pallas gates
+# (fused >= per-phase, pallas bwd >= lax bwd). Full mode additionally runs
+# table4_gans, which merges its train rows into the same artifact (the
+# bench preserves the table4_train section when it rewrites the file).
 from __future__ import annotations
 
 import argparse

@@ -3,15 +3,30 @@
 Emits ``BENCH_transpose_conv.json`` — the perf-trajectory artifact future PRs
 compare against. Per layer it records:
 
-* wall-clock seconds for every lax-based method (conventional, unified,
-  unified_reshape, unified_matmul, unified_fused) plus the tuned ``auto``
-  dispatch;
-* FLOP/byte roofline-proxy seconds for the two Pallas grids (on CPU they only
-  run interpreted, so wall clock would time the Python interpreter — the
-  proxy is the backend-honest comparison; on a real TPU backend both are
-  also wall-clocked);
-* ``fused_vs_phase``: the fused kernel's speedup over the per-phase grid
-  (must be >= 1 on every layer — checked by ``--check`` and CI).
+* **forward** wall-clock seconds for every lax-based method (conventional,
+  unified, unified_reshape, unified_matmul, unified_fused) plus the tuned
+  ``auto`` dispatch;
+* **backward** wall-clock seconds for the lax VJP plus FLOP/byte
+  roofline-proxy seconds for BOTH backward candidates (the segregated
+  Pallas dx+dw kernels and the lax VJP); on a real TPU backend the Pallas
+  backward is also wall-clocked;
+* **full train step** (``value_and_grad``) wall-clock seconds per method,
+  with ``auto`` running in training mode — i.e. whatever the cache holds at
+  bench time: the jointly-tuned step winner after
+  ``python -m repro.kernels.autotune --gan-zoo --train``, the napkin-rule
+  fallback on a cold cache (what hermetic CI measures);
+* FLOP/byte roofline-proxy seconds for the two forward Pallas grids (on CPU
+  they only run interpreted, so wall clock would time the Python
+  interpreter — the proxy is the backend-honest comparison);
+* ``fused_vs_phase``: the fused forward kernel's speedup over the per-phase
+  grid, and ``bwd_pallas_vs_lax``: the segregated Pallas backward's speedup
+  over the lax VJP (both must be >= 1 on every layer — checked by
+  ``--check`` and CI). On TPU both ratios are measured wall clock; on CPU
+  they compare the analytic roofline models, so there the gates guard the
+  models' tiling/geometry assumptions rather than kernel wall time.
+
+Top-level keys written by other tools into the same artifact (e.g.
+``table4_train`` from ``benchmarks.table4_gans``) are preserved.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.transpose_conv_bench [--quick]
@@ -38,7 +53,7 @@ def bench_layer(hw, cin, cout, kernel, padding, methods, *, repeats, warmup):
     import jax.numpy as jnp
 
     from repro.core import transpose_conv2d
-    from repro.kernels import autotune
+    from repro.kernels import autotune, ops
 
     x = jax.random.normal(jax.random.key(hw), (1, hw, hw, cin))
     k = jax.random.normal(
@@ -67,9 +82,45 @@ def bench_layer(hw, cin, cout, kernel, padding, methods, *, repeats, warmup):
             "pallas_phase", 1, hw, kernel, cin, cout, padding
         ),
     }
+
+    # ---- backward: lax VJP wall clock + both backward candidates by proxy
+    m_out = want.shape[1]
+    g = jax.random.normal(jax.random.key(hw + 2), (1, m_out, m_out, cout))
+    bwd_wall = {
+        "lax": time_fn(
+            lambda x, k, g: ops._lax_bwd(padding, (x, k), g),
+            x, k, g, repeats=repeats, warmup=warmup,
+        )
+    }
+    bwd_pallas_s, (btile_h, btile_w) = autotune.best_bwd_proxy(
+        1, hw, kernel, cin, cout, padding
+    )
+    bwd_proxy = {
+        "pallas": bwd_pallas_s,
+        "lax": autotune.bwd_roofline_proxy(
+            "lax", 1, hw, kernel, cin, cout, padding
+        ),
+    }
+
+    # ---- full train step (value_and_grad) per method; auto in train mode
+    # (dispatches the tuned step winner only if the cache was pre-tuned
+    # with --train; cold caches measure the napkin-rule fallback)
+    step_wall = {}
+    for m in methods:
+        def loss(x, k, _m=m):
+            return transpose_conv2d(
+                x, k, padding, method=_m, train=(_m == "auto")
+            ).sum()
+
+        fn = jax.jit(jax.value_and_grad(loss, argnums=(0, 1)))
+        step_wall[m] = time_fn(fn, x, k, repeats=repeats, warmup=warmup)
+
     if jax.default_backend() == "tpu":  # compiled kernels: real wall clock
         from repro.kernels.transpose_conv2d import (
             transpose_conv2d_pallas, transpose_conv2d_pallas_phase,
+        )
+        from repro.kernels.transpose_conv2d_bwd import (
+            transpose_conv2d_bwd_pallas,
         )
 
         wall["pallas_fused"] = time_fn(
@@ -81,9 +132,17 @@ def bench_layer(hw, cin, cout, kernel, padding, methods, *, repeats, warmup):
             jax.jit(lambda x, k: transpose_conv2d_pallas_phase(x, k, padding)),
             x, k, repeats=repeats, warmup=warmup,
         )
+        bwd_wall["pallas"] = time_fn(
+            lambda x, k, g: transpose_conv2d_bwd_pallas(
+                x, k, g, padding, tile_h=btile_h, tile_w=btile_w
+            ),
+            x, k, g, repeats=repeats, warmup=warmup,
+        )
         fused_vs_phase = wall["pallas_phase"] / wall["pallas_fused"]
+        bwd_pallas_vs_lax = bwd_wall["lax"] / bwd_wall["pallas"]
     else:
         fused_vs_phase = proxy["pallas_phase"] / proxy["pallas_fused"]
+        bwd_pallas_vs_lax = bwd_proxy["lax"] / bwd_proxy["pallas"]
     return {
         "layer": f"{hw}x{hw}x{cin}",
         "hw": hw, "cin": cin, "cout": cout,
@@ -91,6 +150,11 @@ def bench_layer(hw, cin, cout, kernel, padding, methods, *, repeats, warmup):
         "proxy_s": proxy,
         "fused_tile": [tile_h, tile_w],
         "fused_vs_phase": fused_vs_phase,
+        "bwd_wall_s": bwd_wall,
+        "bwd_proxy_s": bwd_proxy,
+        "bwd_tile": [btile_h, btile_w],
+        "bwd_pallas_vs_lax": bwd_pallas_vs_lax,
+        "step_wall_s": step_wall,
     }
 
 
@@ -102,7 +166,7 @@ def run(quick: bool = False) -> dict:
     models = list(GAN_ZOO)[:1] if quick else list(GAN_ZOO)
 
     out = {
-        "schema": "repro/bench_transpose_conv/v1",
+        "schema": "repro/bench_transpose_conv/v2",
         "backend": jax.default_backend(),
         "quick": quick,
         "methods": list(methods),
@@ -120,17 +184,38 @@ def run(quick: bool = False) -> dict:
         totals = {
             m: sum(r["wall_s"][m] for r in rows) for m in rows[0]["wall_s"]
         }
-        out["models"][name] = {"layers": rows, "totals": totals}
+        step_totals = {
+            m: sum(r["step_wall_s"][m] for r in rows)
+            for m in rows[0]["step_wall_s"]
+        }
+        bwd_totals = {
+            m: sum(r["bwd_wall_s"][m] for r in rows)
+            for m in rows[0]["bwd_wall_s"]
+        }
+        out["models"][name] = {
+            "layers": rows, "totals": totals,
+            "bwd_totals": bwd_totals, "step_totals": step_totals,
+        }
     return out
 
 
 def check(result: dict) -> list[str]:
-    """The acceptance gate: fused >= per-phase on every Table-4 layer."""
+    """The acceptance gates, on every Table-4 layer: the fused forward must
+    beat the per-phase grid AND the segregated Pallas backward must beat
+    the lax VJP."""
     bad = []
     for name, model in result["models"].items():
         for row in model["layers"]:
             if row["fused_vs_phase"] < 1.0:
-                bad.append(f"{name}/{row['layer']}: {row['fused_vs_phase']:.3f}")
+                bad.append(
+                    f"{name}/{row['layer']}: fused_vs_phase="
+                    f"{row['fused_vs_phase']:.3f}"
+                )
+            if row["bwd_pallas_vs_lax"] < 1.0:
+                bad.append(
+                    f"{name}/{row['layer']}: bwd_pallas_vs_lax="
+                    f"{row['bwd_pallas_vs_lax']:.3f}"
+                )
     return bad
 
 
@@ -140,26 +225,40 @@ def main(argv=None):
                     help="smoke subset: dcgan only, 3 methods, 2 repeats")
     ap.add_argument("--out", default="BENCH_transpose_conv.json")
     ap.add_argument("--check", action="store_true",
-                    help="exit nonzero unless fused >= per-phase everywhere")
+                    help="exit nonzero unless fused >= per-phase and "
+                         "pallas bwd >= lax bwd everywhere")
     args = ap.parse_args(argv)
 
     result = run(quick=args.quick)
-    Path(args.out).write_text(json.dumps(result, indent=1, sort_keys=True))
+    out_path = Path(args.out)
+    if out_path.exists():  # preserve sections other tools merged in
+        try:
+            prev = json.loads(out_path.read_text())
+            for key, val in prev.items():
+                if key not in result:
+                    result[key] = val
+        except (json.JSONDecodeError, OSError):
+            pass
+    out_path.write_text(json.dumps(result, indent=1, sort_keys=True))
     print(f"# wrote {args.out} (backend={result['backend']}, "
           f"quick={result['quick']})")
-    print("model,layer,auto_s,best_wall_method,fused_vs_phase")
+    print("model,layer,auto_s,step_auto_s,best_wall_method,"
+          "fused_vs_phase,bwd_pallas_vs_lax")
     for name, model in result["models"].items():
         for row in model["layers"]:
             best = min(row["wall_s"], key=row["wall_s"].get)
             print(f"{name},{row['layer']},{row['wall_s']['auto']:.5f},"
-                  f"{best},{row['fused_vs_phase']:.3f}")
+                  f"{row['step_wall_s']['auto']:.5f},"
+                  f"{best},{row['fused_vs_phase']:.3f},"
+                  f"{row['bwd_pallas_vs_lax']:.3f}")
     bad = check(result)
     if bad:
-        print("FUSED REGRESSION vs per-phase on:", "; ".join(bad))
+        print("PALLAS REGRESSION on:", "; ".join(bad))
         if args.check:
             raise SystemExit(1)
     elif args.check:
-        print("# check ok: fused >= per-phase on every layer")
+        print("# check ok: fused >= per-phase and pallas bwd >= lax bwd "
+              "on every layer")
 
 
 if __name__ == "__main__":

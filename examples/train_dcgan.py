@@ -2,13 +2,19 @@
 unified kernel-segregated transpose convolution — the paper's own workload.
 
 Non-saturating GAN loss on synthetic band-limited images, AdamW for both
-nets, a few hundred steps on CPU.
+nets, a few hundred steps on CPU. The generator defaults to the
+**jointly-tuned** dispatch path (``method="auto"`` in training mode: the
+autotuner's full-train-step winners, with the Pallas layers' custom VJP
+dispatching between the segregated Pallas backward and the lax VJP);
+``--tune`` pre-populates the cache for the reduced layer shapes before the
+train step is traced. Per-step wall time is logged via
+:class:`repro.timing.StepTimer`, so the example doubles as an end-to-end
+training-speed repro.
 
-Run:  PYTHONPATH=src python examples/train_dcgan.py [--steps 200]
+Run:  PYTHONPATH=src python examples/train_dcgan.py [--steps 200] [--tune]
 """
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +22,7 @@ import jax.numpy as jnp
 from repro.data import SyntheticImages
 from repro.models import gan
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.timing import StepTimer
 
 
 def main():
@@ -25,8 +32,13 @@ def main():
     ap.add_argument("--method", default="auto",
                     choices=["auto", "unified", "conventional", "pallas",
                              "pallas_phase"],
-                    help="'auto' consults the autotuner cache per layer "
-                         "(repro.kernels.autotune; napkin-rule fallback)")
+                    help="'auto' (default) consults the autotuner cache per "
+                         "layer shape in training mode — the jointly-tuned "
+                         "fwd+bwd step winner (napkin-rule fallback when "
+                         "cold)")
+    ap.add_argument("--tune", action="store_true",
+                    help="jointly tune (fwd+bwd+step) the reduced layer "
+                         "shapes before tracing the train step")
     args = ap.parse_args()
 
     # reduced DC-GAN (channels/16) => 32x32 outputs, CPU-friendly
@@ -40,6 +52,20 @@ def main():
     print(f"[dcgan] generator -> {out_hw}x{out_hw}x{out_c}, "
           f"method={args.method}")
 
+    if args.tune:
+        # tune BEFORE the jitted step is traced: the outer jit pins whatever
+        # the cache says at trace time (docs/AUTOTUNE.md)
+        from repro.kernels import autotune
+
+        for hw, cin, cout in cfg.layers:
+            rec = autotune.tune_layer(
+                args.batch, hw, cfg.kernel, cin, cout, cfg.padding,
+                train=True,
+            )
+            print(f"[tune] {hw}x{hw}x{cin}->{cout}: "
+                  f"fwd={rec['fwd']['method']} bwd={rec['bwd']['method']} "
+                  f"step={rec['step']['method']}")
+
     gp = gan.generator_init(jax.random.key(0), cfg)
     dp = gan.discriminator_init(jax.random.key(1), out_hw, out_c)
     opt_cfg = AdamWConfig(lr=2e-4, b1=0.5, b2=0.999, weight_decay=0.0)
@@ -49,7 +75,7 @@ def main():
                            global_batch=args.batch)
 
     def d_loss_fn(dp, gp, real, z):
-        fake = gan.generator_apply(gp, cfg, z, method=args.method)
+        fake = gan.generator_apply(gp, cfg, z, method=args.method, train=True)
         d_real = gan.discriminator_apply(dp, real)
         d_fake = gan.discriminator_apply(dp, fake)
         return (
@@ -58,7 +84,7 @@ def main():
         )
 
     def g_loss_fn(gp, dp, z):
-        fake = gan.generator_apply(gp, cfg, z, method=args.method)
+        fake = gan.generator_apply(gp, cfg, z, method=args.method, train=True)
         return jnp.mean(jax.nn.softplus(-gan.discriminator_apply(dp, fake)))
 
     @jax.jit
@@ -69,15 +95,21 @@ def main():
         gp, g_opt, _ = adamw_update(gg, g_opt, gp, opt_cfg, opt_cfg.lr)
         return gp, dp, g_opt, d_opt, gl, dl
 
-    t0 = time.time()
+    timer = StepTimer()
     for i in range(args.steps):
         real = data.batch(i)
         z = jax.random.normal(jax.random.fold_in(jax.random.key(7), i),
                               (args.batch, cfg.z_dim))
-        gp, dp, g_opt, d_opt, gl, dl = step(gp, dp, g_opt, d_opt, real, z)
+        gp, dp, g_opt, d_opt, gl, dl = jax.block_until_ready(
+            step(gp, dp, g_opt, d_opt, real, z)
+        )
+        dt = timer.tick()
         if i % 20 == 0:
             print(f"step {i:4d}  g_loss {float(gl):.4f}  "
-                  f"d_loss {float(dl):.4f}  ({time.time() - t0:.1f}s)")
+                  f"d_loss {float(dl):.4f}  step {dt * 1e3:.1f}ms  "
+                  f"(mean {timer.mean() * 1e3:.1f}ms)")
+    print(f"[dcgan] steady-state step time: mean {timer.mean() * 1e3:.2f}ms "
+          f"median {timer.median() * 1e3:.2f}ms over {len(timer.steps)} steps")
     img = gan.generator_apply(
         gp, cfg, jax.random.normal(jax.random.key(9), (1, cfg.z_dim)),
         method=args.method,

@@ -195,14 +195,19 @@ def transpose_conv_unified_reshape(x, kernel, padding: int = 0, *,
     return y[:, :m, :m, :]
 
 
-def transpose_conv_auto(x, kernel, padding: int = 0, *, precision=None):
+def transpose_conv_auto(x, kernel, padding: int = 0, *, precision=None,
+                        train: bool = False):
     """Measured per-layer method selection (HUGE²-style dispatch).
 
     Consults the persistent autotuner cache (:mod:`repro.kernels.autotune`)
     for this exact (backend, batch, N, n, Cin, Cout, P, dtype) layer shape —
     a hit dispatches to the measured winner (including the Pallas kernels,
-    which keep their custom VJP via :mod:`repro.kernels.ops`). Cold cache
-    falls back to the old §Perf napkin rule: the segregated form wins
+    which keep their custom VJP via :mod:`repro.kernels.ops`). In
+    **training** mode (``train=True``) the jointly-tuned ``step`` entry —
+    the forward method whose full fwd+bwd ``value_and_grad`` measured
+    fastest — takes precedence over the forward-only winner, so a forward
+    that is fast to run but slow to differentiate loses dispatch. Cold
+    cache falls back to the old §Perf napkin rule: the segregated form wins
     whenever the per-phase GEMM has enough rows (M = ceil(out/2)^2); below
     that (the 4x4/8x8 GAN head layers at batch 1) the single big
     conventional GEMM is faster on CPU because XLA's skinny-M GEMM
@@ -210,10 +215,13 @@ def transpose_conv_auto(x, kernel, padding: int = 0, *, precision=None):
     """
     from repro.kernels import autotune
 
-    entry = autotune.best_method(
+    rec = autotune.best_entry(
         x.shape[0], x.shape[1], kernel.shape[0], kernel.shape[2],
         kernel.shape[3], padding, str(x.dtype),
     )
+    entry = None
+    if rec is not None:
+        entry = (rec.get("step") if train else None) or rec.get("fwd")
     if entry is not None:
         method = entry["method"]
         if method.startswith("pallas"):
@@ -221,9 +229,13 @@ def transpose_conv_auto(x, kernel, padding: int = 0, *, precision=None):
 
             if method == "pallas_phase":
                 return ops.transpose_conv2d_pallas_phase(x, kernel, padding)
+            # step winners carry the fwd race's tiles; fall back to the
+            # fwd entry's tiles when only the fwd direction was tuned
+            fwd = rec.get("fwd") or {}
             return ops.transpose_conv2d_pallas(
                 x, kernel, padding,
-                entry.get("tile_h"), entry.get("tile_w"),
+                entry.get("tile_h", fwd.get("tile_h")),
+                entry.get("tile_w", fwd.get("tile_w")),
             )
         fn = METHODS.get(method)
         if fn is not None and fn is not transpose_conv_auto:
@@ -305,27 +317,34 @@ def transpose_conv2d(
     *,
     method: str = "unified",
     precision=None,
+    train: bool = False,
 ) -> jnp.ndarray:
     """Stride-2 transpose convolution, paper semantics. See module docstring.
 
-    For ``method="auto"`` the autotuner cache *generation* is part of the jit
-    key: tuning within a live process invalidates previously traced dispatch
-    decisions instead of silently keeping the stale winner.
+    For ``method="auto"`` — and for the explicit Pallas methods, whose
+    custom VJP consults the cache's ``bwd`` entry at trace time — the
+    autotuner cache *generation* is part of the jit key: tuning within a
+    live process invalidates previously traced dispatch decisions instead
+    of silently keeping the stale winner. ``train=True`` makes ``auto``
+    prefer the jointly-tuned full-train-step winner (see
+    :func:`transpose_conv_auto`); it is a no-op for explicit methods.
     """
     epoch = 0
-    if method == "auto":
+    if method in ("auto", "pallas", "pallas_fused", "pallas_phase"):
         from repro.kernels import autotune
 
         epoch = autotune.generation()
     return _transpose_conv2d_jit(
-        x, kernel, padding, method=method, precision=precision,
+        x, kernel, padding, method=method, precision=precision, train=train,
         _dispatch_epoch=epoch,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("padding", "method", "precision", "_dispatch_epoch"),
+    static_argnames=(
+        "padding", "method", "precision", "train", "_dispatch_epoch",
+    ),
 )
 def _transpose_conv2d_jit(
     x: jnp.ndarray,
@@ -334,6 +353,7 @@ def _transpose_conv2d_jit(
     *,
     method: str = "unified",
     precision=None,
+    train: bool = False,
     _dispatch_epoch: int = 0,
 ) -> jnp.ndarray:
     # local imports: keep Pallas optional at import time
@@ -345,6 +365,10 @@ def _transpose_conv2d_jit(
         from repro.kernels import ops
 
         return ops.transpose_conv2d_pallas_phase(x, kernel, padding)
+    if method == "auto":
+        return transpose_conv_auto(
+            x, kernel, padding, precision=precision, train=train
+        )
     try:
         fn = METHODS[method]
     except KeyError:

@@ -7,33 +7,52 @@ HUGE² (arXiv:1907.11210) solves with *measured* per-layer operator selection:
 no napkin rule survives contact with real hardware, so the winner for a layer
 shape is decided by timing candidates on the machine at hand and remembered.
 
+Since cache schema **v2** the training step is the tuned unit: each layer
+record carries per-direction entries —
+
+* ``fwd``   — the forward operator race (what v1 stored);
+* ``bwd``   — the backward race between the segregated Pallas backward
+  (``repro.kernels.transpose_conv2d_bwd`` — dx + dw kernels) and the lax
+  VJP of ``transpose_conv_unified``; the winner is what
+  ``repro.kernels.ops``'s custom VJP dispatches to (``bwd="auto"``);
+* ``step``  — the full fwd+bwd ``value_and_grad`` race per forward method:
+  the winner is what ``method="auto"`` dispatches to in **training** mode
+  (``train=True``), where a forward that is fast to run but slow to
+  differentiate must lose.
+
 Components:
 
 * :func:`tune_layer` — times every candidate for one layer shape (several
-  spatial-tile variants for the fused Pallas kernel) and records the winner.
+  spatial-tile variants for the Pallas kernels) and records the winner;
+  ``train=True`` additionally tunes the ``bwd`` and ``step`` directions.
 * A persistent JSON cache keyed by ``(backend, batch, N, n, Cin, Cout, P,
   dtype)``; location from ``$REPRO_AUTOTUNE_CACHE`` (default
   ``~/.cache/repro/autotune.json``). Concurrent writers last-write-win on an
-  atomic rename; the in-memory view reloads on file mtime change.
-* :func:`best_method` — cache-only consult used by
-  ``repro.core.transpose_conv.transpose_conv_auto`` at trace time: a hit
-  dispatches to the measured winner, a miss falls back to the old heuristic
-  (cold-cache behaviour is unchanged).
-* :func:`roofline_proxy` — analytic ``max(flops/peak_flops, bytes/peak_bw)``
-  seconds for the two Pallas grids. The lax-based candidates always race on
-  wall clock. The Pallas kernels race on wall clock only on a real
-  accelerator backend (and can then win dispatch); on CPU they only run in
-  interpret mode (Python-speed, not predictive of TPU), so there they are
-  *reported* via this proxy and never selected as the winner.
+  atomic rename; the in-memory view reloads on file mtime change. **v1
+  cache files migrate on load** (flat entries become the ``fwd`` direction;
+  ``bwd``/``step`` stay cold until retuned) and are rewritten as v2 on the
+  next save; unknown versions are ignored.
+* :func:`best_method` / :func:`best_bwd` / :func:`best_entry` — cache-only
+  consults used at trace time by ``transpose_conv_auto`` (fwd/step) and the
+  custom VJP in ``repro.kernels.ops`` (bwd). A miss falls back to the old
+  heuristic (cold-cache behaviour is unchanged).
+* :func:`roofline_proxy` / :func:`bwd_roofline_proxy` — analytic
+  ``max(flops/peak_flops, bytes/peak_bw)`` seconds for the Pallas grids and
+  their lax counterparts. The lax-based candidates always race on wall
+  clock. The Pallas kernels race on wall clock only on a real accelerator
+  backend (and can then win dispatch); on CPU they only run in interpret
+  mode (Python-speed, not predictive of TPU), so there they are *reported*
+  via the proxy and never selected as the winner.
 
 Cache entry format (``docs/AUTOTUNE.md``)::
 
-    {"method": "unified_reshape",        # winner for dispatch
-     "time_s": 1.2e-4,                   # winner's measured seconds
-     "source": "measured",               # how the winner was picked
-     "tile_h": 8, "tile_w": 128,         # only for pallas_fused winners
-     "candidates": {"conventional": 3.4e-4, ...},   # wall-clock losers too
-     "proxy": {"pallas_fused": 1.1e-6, "pallas_phase": 2.9e-6}}
+    {"fwd":  {"method": "unified_reshape", "time_s": 1.2e-4,
+              "source": "measured", "tile_h": 8, "tile_w": 128,
+              "candidates": {...}, "proxy": {...}},
+     "bwd":  {"method": "lax", "time_s": 3.1e-4, "source": "measured",
+              "candidates": {...}, "proxy": {"pallas": ..., "lax": ...}},
+     "step": {"method": "unified_reshape", "time_s": 4.4e-4,
+              "candidates": {...}}}
 """
 from __future__ import annotations
 
@@ -49,6 +68,10 @@ import numpy as np
 
 from repro.core import segregation as seg
 from repro.kernels.transpose_conv2d import default_tiles
+from repro.kernels.transpose_conv2d_bwd import (
+    default_bwd_tiles,
+    default_dw_tile,
+)
 from repro.timing import time_fn as _time_fn
 
 # Nominal accelerator peaks for the roofline proxy (TPU v4-ish; only the
@@ -56,15 +79,19 @@ from repro.timing import time_fn as _time_fn
 PEAK_FLOPS = 275e12
 PEAK_BW = 1.2e12
 
-_CACHE_VERSION = 1
+_CACHE_VERSION = 2
+_DIRECTIONS = ("fwd", "bwd", "step")
 # in-memory cache state; "generation" bumps whenever entries change (record,
 # clear, reload-from-disk) so 'auto' dispatch can retrace (see generation())
 _STATE: dict[str, Any] = {
     "path": None, "mtime": -1.0, "entries": {}, "generation": 0,
 }
 
-# Spatial-tile variants raced for the fused Pallas kernel.
+# Spatial-tile variants raced for the fused forward Pallas kernel.
 _FUSED_TILES = ((8, 128), (16, 128), (8, 64), (32, 32))
+# dx spatial-tile variants raced for the Pallas backward (dw races its
+# default reduction tile; the dx grid dominates the backward traffic).
+_BWD_TILES = ((8, 128), (16, 128), (8, 64), (32, 32))
 
 
 def cache_path() -> Path:
@@ -84,33 +111,62 @@ def layer_key(
     )
 
 
+def _normalize(entry: dict) -> dict:
+    """Flat v1-style entries become the ``fwd`` direction of a v2 record."""
+    if any(d in entry for d in _DIRECTIONS):
+        return entry
+    return {"fwd": entry}
+
+
 def _load() -> dict:
-    """Reload the persistent cache if the file changed since last read."""
+    """Reload the persistent cache if the file changed since last read.
+
+    Change detection uses (st_mtime_ns, st_size) — mtime alone misses
+    rewrites that land within one filesystem timestamp tick.
+    """
     path = cache_path()
     if _STATE["path"] != str(path):
         _STATE.update(path=str(path), mtime=-1.0, entries={})
         _STATE["generation"] += 1
     try:
-        mtime = path.stat().st_mtime
+        st = path.stat()
+        sig = (st.st_mtime_ns, st.st_size)
     except OSError:
         return _STATE["entries"]
-    if mtime != _STATE["mtime"]:
+    if sig != _STATE["mtime"]:
         try:
             blob = json.loads(path.read_text())
+            if not isinstance(blob, dict):
+                blob = {}  # valid JSON but not a cache: treat as foreign
             if blob.get("version") == _CACHE_VERSION:
                 _STATE["entries"] = blob.get("entries", {})
+            elif blob.get("version") == 1:
+                # v1 (forward-only) caches migrate in place: flat entries
+                # become the fwd direction; bwd/step stay cold until retuned.
+                # The next _save() rewrites the file as v2.
+                _STATE["entries"] = {
+                    k: _normalize(dict(e))
+                    for k, e in blob.get("entries", {}).items()
+                }
             else:  # foreign version: don't pin stale entries as current
                 _STATE["entries"] = {}
             _STATE["generation"] += 1
         except (json.JSONDecodeError, OSError):
             pass  # corrupt/unreadable cache: keep the in-memory view
-        _STATE["mtime"] = mtime
+        _STATE["mtime"] = sig
     return _STATE["entries"]
 
 
 def _save() -> None:
     path = cache_path()
     path.parent.mkdir(parents=True, exist_ok=True)
+    try:  # never clobber a newer tool's cache: set it aside, don't destroy
+        prev = json.loads(path.read_text())
+        ver = prev.get("version") if isinstance(prev, dict) else None
+        if ver is not None and ver not in (1, _CACHE_VERSION):
+            path.replace(path.with_name(path.name + f".v{ver}.bak"))
+    except (json.JSONDecodeError, OSError):
+        pass  # corrupt/missing cache: overwriting it loses nothing
     blob = {"version": _CACHE_VERSION, "entries": _STATE["entries"]}
     fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
     try:
@@ -121,18 +177,36 @@ def _save() -> None:
         if os.path.exists(tmp):
             os.unlink(tmp)
     try:
-        _STATE["mtime"] = path.stat().st_mtime
+        st = path.stat()
+        _STATE["mtime"] = (st.st_mtime_ns, st.st_size)
     except OSError:
         pass
 
 
 def lookup(key: str) -> dict | None:
+    """Full per-direction record for ``key`` (see module docstring)."""
     return _load().get(key)
 
 
-def record(key: str, entry: dict, *, persist: bool = True) -> None:
+def record(
+    key: str, entry: dict, *, direction: str | None = None,
+    persist: bool = True,
+) -> None:
+    """Store ``entry`` for ``key``.
+
+    ``direction=None`` replaces the whole record (flat entries are treated
+    as the ``fwd`` direction for v1 compatibility); ``direction="fwd"``/
+    ``"bwd"``/``"step"`` merges that one direction into the existing record.
+    """
     _load()
-    _STATE["entries"][key] = entry
+    if direction is None:
+        _STATE["entries"][key] = _normalize(entry)
+    else:
+        if direction not in _DIRECTIONS:
+            raise ValueError(f"unknown direction {direction!r}")
+        rec = dict(_STATE["entries"].get(key) or {})
+        rec[direction] = entry
+        _STATE["entries"][key] = rec
     _STATE["generation"] += 1
     if persist:
         _save()
@@ -159,12 +233,30 @@ def generation() -> int:
     return _STATE["generation"]
 
 
+def best_entry(
+    b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int,
+    dtype: str = "float32",
+) -> dict | None:
+    """Cache-only consult: the full per-direction record, or None."""
+    return lookup(layer_key(b, n_in, n_k, cin, cout, padding, dtype))
+
+
 def best_method(
     b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int,
     dtype: str = "float32",
 ) -> dict | None:
-    """Cache-only consult (no measurement). Returns the entry or None."""
-    return lookup(layer_key(b, n_in, n_k, cin, cout, padding, dtype))
+    """Cache-only consult (no measurement): the ``fwd`` entry or None."""
+    rec = best_entry(b, n_in, n_k, cin, cout, padding, dtype)
+    return rec.get("fwd") if rec else None
+
+
+def best_bwd(
+    b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int,
+    dtype: str = "float32",
+) -> dict | None:
+    """Cache-only consult (no measurement): the ``bwd`` entry or None."""
+    rec = best_entry(b, n_in, n_k, cin, cout, padding, dtype)
+    return rec.get("bwd") if rec else None
 
 
 # ------------------------------------------------------------------ roofline
@@ -191,7 +283,7 @@ def roofline_proxy(
     padding: int = 0, *, tile_h: int | None = None, tile_w: int | None = None,
     dtype_bytes: int = 4,
 ) -> float:
-    """Analytic seconds for the Pallas grids: max(compute, HBM traffic).
+    """Analytic seconds for the forward Pallas grids: max(compute, HBM).
 
     Models exactly what each grid moves per step: the per-phase kernel
     re-fetches the full ``(Np, Np, ci)`` plane for every ``(phase, cout_tile,
@@ -237,6 +329,96 @@ def best_fused_proxy(
     return best
 
 
+def bwd_roofline_proxy(
+    method: str, b: int, n_in: int, n_k: int, cin: int, cout: int,
+    padding: int = 0, *, tile_h: int | None = None, tile_w: int | None = None,
+    dtype_bytes: int = 4,
+) -> float:
+    """Analytic seconds for the full backward pass (dx + dw).
+
+    method="pallas": the segregated Pallas backward — the dx grid fetches
+    one halo'd tile of the four parity planes per step (serving all four
+    correlations), the dw grid fetches the forward's halo'd input tile plus
+    the parity-plane tiles and carries the stacked-gradient accumulator
+    across the (batch, h_tile) steps. Both accumulators are revisited only
+    by *consecutive* grid steps (the reduction axes are innermost), so the
+    block stays resident in VMEM and each output block is counted as ONE
+    HBM write — unlike the forward model's conservative write+read-back
+    convention, which only compares Pallas grids against each other.
+
+    method="lax": the lax VJP of the segregated lax forward — same MACs on
+    the dw half, but each phase's conv input-gradient over-computes into the
+    ``R - 1`` zero frame (factor ``((Hp + R - 1) / Hp)^2`` on the dx half),
+    and XLA materializes per-phase buffers: the parity-plane extraction
+    copies of ``g``, four dx-sized partials written then re-read by the
+    accumulating adds, per-phase plane and input reads, and the dw
+    write/read pair.
+    """
+    m = seg.output_size(n_in, n_k, padding)
+    R = seg.ceil_half(n_k)
+    Hp = Wp = (m + 1) // 2
+    macs2 = 2 * b * seg.flop_count(n_in, n_k, cin, cout, padding)
+    if method in ("pallas", "pallas_bwd"):
+        flops = 2 * macs2  # dx + dw, exact extents
+        # dx grid (b, n_h, n_w, cin_tile, cout_tile)
+        dth, dtw, dci, dco = default_bwd_tiles(n_in, n_k, padding, cin, cout)
+        th = min(tile_h or dth, n_in)
+        tw = min(tile_w or dtw, n_in)
+        n_h, n_w = -(-n_in // th), -(-n_in // tw)
+        n_ci, n_co = cin // dci, cout // dco
+        steps = b * n_h * n_w * n_ci * n_co
+        dx_in = steps * 4 * (th + R - 1) * (tw + R - 1) * dco * dtype_bytes
+        dx_w = steps * 4 * R * R * dco * dci * dtype_bytes
+        # resident accumulator: one fp32 write per (b, i, j, cin) out block
+        dx_out = b * n_h * n_w * n_ci * th * tw * dci * 4
+        # dw grid (cin_tile, cout_tile, batch, h_tile)
+        thw = default_dw_tile(n_in, n_k, padding)
+        ci_w, co_w = min(cin, 512), min(cout, 128)
+        n_hw = -(-Hp // thw)
+        stepsw = (cin // ci_w) * (cout // co_w) * b * n_hw
+        dw_in = stepsw * (
+            (thw + R) * (Wp + R) * ci_w + 4 * thw * Wp * co_w
+        ) * dtype_bytes
+        # resident accumulator: one fp32 write per (cin, cout) stack block
+        dw_out = (cin // ci_w) * (cout // co_w) * 4 * R * R * ci_w * co_w * 4
+        bytes_moved = dx_in + dx_w + dx_out + dw_in + dw_out
+    elif method == "lax":
+        over = ((Hp + R - 1) / Hp) ** 2  # conv input-grad zero-frame waste
+        flops = (1 + over) * macs2
+        g_b = b * m * m * cout * 4
+        plane_b = b * Hp * Wp * cout * 4
+        x_b = b * n_in * n_in * cin * dtype_bytes
+        dx_b = b * n_in * n_in * cin * 4
+        dw_b = 4 * R * R * cin * cout * 4  # stacked extent, like the kernel
+        bytes_moved = (
+            2 * g_b            # parity-plane extraction copies
+            + 4 * 2 * plane_b  # each phase's plane read twice (dx + dw pass)
+            + 4 * 2 * dx_b     # four dx partials written + re-read to add
+            + 4 * x_b          # dw re-reads the padded input per phase
+            + dw_b             # per-phase sub-kernel reads (dx pass)
+            + 2 * dw_b         # dw write + read-back
+        )
+    else:
+        raise ValueError(f"no backward roofline model for method {method!r}")
+    return max(flops / PEAK_FLOPS, bytes_moved / PEAK_BW)
+
+
+def best_bwd_proxy(
+    b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int = 0,
+    *, dtype_bytes: int = 4,
+) -> tuple[float, tuple[int, int]]:
+    """Best (seconds, (tile_h, tile_w)) over the dx-kernel tile variants."""
+    best = None
+    for th, tw in _BWD_TILES:
+        t = bwd_roofline_proxy(
+            "pallas", b, n_in, n_k, cin, cout, padding,
+            tile_h=th, tile_w=tw, dtype_bytes=dtype_bytes,
+        )
+        if best is None or t < best[0]:
+            best = (t, (th, tw))
+    return best
+
+
 # ------------------------------------------------------------------- tuning
 
 # lax-based candidates always race on wall clock
@@ -245,49 +427,20 @@ LAX_CANDIDATES = (
 )
 PALLAS_CANDIDATES = ("pallas_fused", "pallas_phase")
 DEFAULT_CANDIDATES = LAX_CANDIDATES + PALLAS_CANDIDATES
+BWD_CANDIDATES = ("lax", "pallas")
 
 
-def tune_layer(
-    b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int = 0,
-    *, dtype=jnp.float32, methods: tuple | None = None,
-    repeats: int = 3, warmup: int = 1, persist: bool = True,
-    include_pallas: bool | None = None,
-) -> dict:
-    """Measure candidates for one layer shape, record + return the winner.
-
-    ``methods`` filters the candidate set (default: every lax method plus
-    both Pallas kernels). include_pallas=None (auto): Pallas kernels race on
-    wall clock only on a real accelerator backend; on CPU they run in
-    interpret mode (wall clock would measure the Python interpreter, not the
-    operator), so there they are reported via the roofline proxy and never
-    become the winner.
-    """
+def _tune_fwd(
+    x, k, padding, lax_methods, pallas_methods, include_pallas,
+    repeats, warmup,
+):
     from repro.core import transpose_conv as tc
     from repro.kernels.transpose_conv2d import (
         transpose_conv2d_pallas, transpose_conv2d_pallas_phase,
     )
 
-    backend = jax.default_backend()
-    if include_pallas is None:
-        # the Pallas kernels are TPU-lowered (TPU compiler params, Unblocked
-        # indexing); everywhere else they only run interpreted
-        include_pallas = backend == "tpu"
-    methods = tuple(methods or DEFAULT_CANDIDATES)
-    lax_methods = tuple(m for m in methods if m not in PALLAS_CANDIDATES)
-    pallas_methods = tuple(m for m in methods if m in PALLAS_CANDIDATES)
-    if not lax_methods and not include_pallas:
-        raise ValueError(
-            f"nothing to wall-clock: methods={methods} names only Pallas "
-            f"kernels, which backend={backend!r} runs in interpret mode "
-            "(pass include_pallas=True to force, or add a lax method)"
-        )
-
-    rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.normal(size=(b, n_in, n_in, cin)), dtype=dtype)
-    k = jnp.asarray(
-        rng.normal(size=(n_k, n_k, cin, cout)) * 0.05, dtype=dtype
-    )
-
+    b, n_in, _, cin = x.shape
+    n_k, cout = k.shape[0], k.shape[3]
     candidates: dict[str, float] = {}
     for name in lax_methods:
         fn = jax.jit(
@@ -295,7 +448,7 @@ def tune_layer(
         )
         candidates[name] = _time_fn(fn, x, k, repeats=repeats, warmup=warmup)
 
-    itemsize = jnp.dtype(dtype).itemsize
+    itemsize = jnp.dtype(x.dtype).itemsize
     fused_s, (tile_h, tile_w) = best_fused_proxy(
         b, n_in, n_k, cin, cout, padding, dtype_bytes=itemsize
     )
@@ -345,17 +498,179 @@ def tune_layer(
     }
     if winner == "pallas_fused":
         entry["tile_h"], entry["tile_w"] = tile_h, tile_w
-    key = layer_key(
-        b, n_in, n_k, cin, cout, padding, str(jnp.dtype(dtype)), backend
+    return entry, (tile_h, tile_w)
+
+
+def _tune_bwd(x, k, padding, include_pallas, repeats, warmup):
+    from repro.core import transpose_conv as tc
+    from repro.kernels import ops
+    from repro.kernels.transpose_conv2d_bwd import transpose_conv2d_bwd_pallas
+
+    b, n_in, _, cin = x.shape
+    n_k, cout = k.shape[0], k.shape[3]
+    m = seg.output_size(n_in, n_k, padding)
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=(b, m, m, cout)), dtype=jnp.float32)
+
+    candidates: dict[str, float] = {
+        # the cached jitted closure repro.kernels.ops dispatches to
+        "lax": _time_fn(
+            lambda x, k, g: ops._lax_bwd(padding, (x, k), g),
+            x, k, g, repeats=repeats, warmup=warmup,
+        )
+    }
+    itemsize = jnp.dtype(x.dtype).itemsize
+    pallas_s, (tile_h, tile_w) = best_bwd_proxy(
+        b, n_in, n_k, cin, cout, padding, dtype_bytes=itemsize
     )
-    record(key, entry, persist=persist)
+    proxy = {
+        "pallas": pallas_s,
+        "lax": bwd_roofline_proxy(
+            "lax", b, n_in, n_k, cin, cout, padding, dtype_bytes=itemsize
+        ),
+    }
+    if include_pallas:
+        times = {}
+        for th, tw in _BWD_TILES:
+            times[(th, tw)] = _time_fn(
+                lambda x, k, g, _th=th, _tw=tw: transpose_conv2d_bwd_pallas(
+                    x, k, g, padding, tile_h=_th, tile_w=_tw
+                ),
+                x, k, g, repeats=repeats, warmup=warmup,
+            )
+        (tile_h, tile_w), best = min(times.items(), key=lambda kv: kv[1])
+        candidates["pallas"] = best
+
+    winner = min(candidates, key=candidates.get)
+    entry = {
+        "method": winner,
+        "time_s": candidates[winner],
+        "source": "measured",
+        "candidates": candidates,
+        "proxy": proxy,
+    }
+    if winner == "pallas":
+        entry["tile_h"], entry["tile_w"] = tile_h, tile_w
     return entry
 
 
+def _tune_step(
+    x, k, padding, lax_methods, pallas_methods, include_pallas,
+    repeats, warmup, fwd_tiles,
+):
+    """Race the full fwd+bwd value_and_grad per forward method.
+
+    The Pallas forwards differentiate through ``repro.kernels.ops`` with
+    ``bwd="auto"``, i.e. whatever the just-recorded ``bwd`` entry selects —
+    the joint tuning the training dispatch relies on. ``pallas_fused`` runs
+    at the forward race's winning tiles, the exact configuration the entry
+    records and train-mode dispatch will replay.
+    """
+    from repro.core import transpose_conv as tc
+    from repro.kernels import ops
+
+    methods = tuple(lax_methods)
+    if include_pallas:
+        methods += tuple(pallas_methods)
+    candidates: dict[str, float] = {}
+    for name in methods:
+        if name == "pallas_fused":
+            th, tw = fwd_tiles
+
+            def loss(x, k, _th=th, _tw=tw):
+                return ops.transpose_conv2d_pallas(
+                    x, k, padding, _th, _tw, "auto"
+                ).sum()
+        else:
+            def loss(x, k, _m=name):
+                return tc.transpose_conv2d(x, k, padding, method=_m).sum()
+
+        fn = jax.jit(jax.value_and_grad(loss, argnums=(0, 1)))
+        candidates[name] = _time_fn(fn, x, k, repeats=repeats, warmup=warmup)
+
+    winner = min(candidates, key=candidates.get)
+    entry = {
+        "method": winner,
+        "time_s": candidates[winner],
+        "source": "measured",
+        "candidates": candidates,
+    }
+    if winner == "pallas_fused":
+        entry["tile_h"], entry["tile_w"] = fwd_tiles
+    return entry
+
+
+def tune_layer(
+    b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int = 0,
+    *, dtype=jnp.float32, methods: tuple | None = None,
+    repeats: int = 3, warmup: int = 1, persist: bool = True,
+    include_pallas: bool | None = None, train: bool = False,
+) -> dict:
+    """Measure candidates for one layer shape, record + return the record.
+
+    ``methods`` filters the forward candidate set (default: every lax method
+    plus both Pallas kernels). include_pallas=None (auto): Pallas kernels
+    race on wall clock only on a real accelerator backend; on CPU they run
+    in interpret mode (wall clock would measure the Python interpreter, not
+    the operator), so there they are reported via the roofline proxy and
+    never become the winner.
+
+    ``train=True`` tunes the whole training step: the ``bwd`` direction
+    (segregated Pallas backward vs the lax VJP — what ``ops``'s custom VJP
+    dispatches to) and the ``step`` direction (full value_and_grad per
+    forward method — what ``method="auto", train=True`` dispatches to).
+    Returns the full per-direction record.
+    """
+    backend = jax.default_backend()
+    if include_pallas is None:
+        # the Pallas kernels are TPU-lowered (TPU compiler params, Unblocked
+        # indexing); everywhere else they only run interpreted
+        include_pallas = backend == "tpu"
+    methods = tuple(methods or DEFAULT_CANDIDATES)
+    lax_methods = tuple(m for m in methods if m not in PALLAS_CANDIDATES)
+    pallas_methods = tuple(m for m in methods if m in PALLAS_CANDIDATES)
+    if not lax_methods and not include_pallas:
+        raise ValueError(
+            f"nothing to wall-clock: methods={methods} names only Pallas "
+            f"kernels, which backend={backend!r} runs in interpret mode "
+            "(pass include_pallas=True to force, or add a lax method)"
+        )
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, n_in, n_in, cin)), dtype=dtype)
+    k = jnp.asarray(
+        rng.normal(size=(n_k, n_k, cin, cout)) * 0.05, dtype=dtype
+    )
+
+    key = layer_key(
+        b, n_in, n_k, cin, cout, padding, str(jnp.dtype(dtype)), backend
+    )
+    fwd_entry, fwd_tiles = _tune_fwd(
+        x, k, padding, lax_methods, pallas_methods, include_pallas,
+        repeats, warmup,
+    )
+    # one disk write per tune_layer: intermediate directions stay in memory
+    record(key, fwd_entry, direction="fwd", persist=persist and not train)
+    if not train:
+        return lookup(key)
+
+    # bwd before step: the step race differentiates the Pallas forwards
+    # through bwd="auto", which consults the entry recorded here
+    bwd_entry = _tune_bwd(x, k, padding, include_pallas, repeats, warmup)
+    record(key, bwd_entry, direction="bwd", persist=False)
+    step_entry = _tune_step(
+        x, k, padding, lax_methods, pallas_methods, include_pallas,
+        repeats, warmup, fwd_tiles,
+    )
+    record(key, step_entry, direction="step", persist=persist)
+    return lookup(key)
+
+
 def tune_gan_zoo(
-    *, batch: int = 1, repeats: int = 3, persist: bool = True
+    *, batch: int = 1, repeats: int = 3, persist: bool = True,
+    train: bool = False,
 ) -> dict[str, dict]:
-    """Tune every distinct Table-4 GAN layer shape; returns {key: entry}."""
+    """Tune every distinct Table-4 GAN layer shape; returns {key: record}."""
     from repro.models.gan import GAN_ZOO
 
     out = {}
@@ -366,7 +681,8 @@ def tune_gan_zoo(
             if sig in seen:
                 continue
             seen.add(sig)
-            entry = tune_layer(*sig, repeats=repeats, persist=persist)
+            entry = tune_layer(*sig, repeats=repeats, persist=persist,
+                               train=train)
             out[layer_key(*sig)] = entry
     return out
 
@@ -375,6 +691,7 @@ def main(argv=None):
     """CLI: populate the persistent cache.
 
     PYTHONPATH=src python -m repro.kernels.autotune --gan-zoo
+    PYTHONPATH=src python -m repro.kernels.autotune --gan-zoo --train
     PYTHONPATH=src python -m repro.kernels.autotune --layer 1 8 4 512 256 2
     """
     import argparse
@@ -385,19 +702,28 @@ def main(argv=None):
                    help="tune every distinct Table-4 GAN layer shape")
     g.add_argument("--layer", nargs=6, type=int,
                    metavar=("B", "N", "K", "CIN", "COUT", "PAD"))
+    ap.add_argument("--train", action="store_true",
+                    help="also tune the bwd + full-train-step directions")
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args(argv)
 
     if args.gan_zoo:
-        entries = tune_gan_zoo(repeats=args.repeats)
+        entries = tune_gan_zoo(repeats=args.repeats, train=args.train)
     else:
-        entry = tune_layer(*args.layer, repeats=args.repeats)
+        entry = tune_layer(*args.layer, repeats=args.repeats,
+                           train=args.train)
         entries = {layer_key(*args.layer): entry}
     print(f"# cache: {cache_path()}")
-    for key, e in entries.items():
-        extra = (f" tile={e['tile_h']}x{e['tile_w']}"
-                 if "tile_h" in e else "")
-        print(f"{key} -> {e['method']} ({e['time_s']:.6f}s){extra}")
+    for key, rec in entries.items():
+        parts = []
+        for d in _DIRECTIONS:
+            e = rec.get(d)
+            if not e:
+                continue
+            extra = (f"[{e['tile_h']}x{e['tile_w']}]"
+                     if "tile_h" in e else "")
+            parts.append(f"{d}={e['method']}{extra} {e['time_s']:.6f}s")
+        print(f"{key} -> " + "  ".join(parts))
 
 
 if __name__ == "__main__":

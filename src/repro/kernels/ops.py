@@ -1,70 +1,151 @@
 """Jit'd, differentiable wrappers around the Pallas transpose-conv kernels.
 
-The Pallas kernels implement the forward (the phase-fused spatially-tiled
-kernel is the default; the legacy per-phase grid stays available as the
-autotuner baseline); the VJP of both is defined through the
-mathematically-identical lax implementation (`transpose_conv_unified`), so
-the ops are trainable end-to-end (used by the GAN generators in
-models/gan.py, including under the autotuned dispatch of
-``transpose_conv_auto``).
+Forward: the phase-fused spatially-tiled kernel is the default; the legacy
+per-phase grid stays available as the autotuner baseline. Backward: the
+custom VJP dispatches per layer shape between
+
+* the **segregated Pallas backward** (:mod:`repro.kernels.transpose_conv2d_bwd`
+  — dx + dw as first-class kernels, the training hot path), and
+* the **lax VJP** of the mathematically-identical ``transpose_conv_unified``
+  (the candidate/fallback; its jitted closure is built once per
+  ``(padding, shapes, dtypes)`` instead of re-tracing ``jax.vjp`` on every
+  backward call).
+
+``bwd="auto"`` consults the autotuner's per-direction cache
+(:func:`repro.kernels.autotune.best_bwd`): a tuned entry picks the measured
+winner (with its dx tiles); a cold cache defaults to the Pallas backward on
+a real accelerator backend and the lax VJP elsewhere (interpret-mode Pallas
+is Python-speed). Used by the GAN generators in models/gan.py, including
+under the autotuned dispatch of ``transpose_conv_auto``.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
+from repro.core.transpose_conv import transpose_conv_unified
 from repro.kernels.transpose_conv2d import (
     transpose_conv2d_pallas as _pallas_fused_fwd,
     transpose_conv2d_pallas_phase as _pallas_phase_fwd,
 )
+from repro.kernels.transpose_conv2d_bwd import transpose_conv2d_bwd_pallas
+
+BWD_METHODS = ("auto", "pallas", "lax")
 
 
-def _unified_vjp(padding, res, g):
-    from repro.core.transpose_conv import transpose_conv_unified
+@functools.lru_cache(maxsize=None)
+def _unified_vjp_fn(padding, x_shape, x_dtype, k_shape, k_dtype):
+    """Jitted lax-VJP closure, traced once per (padding, shapes, dtypes).
 
+    The jit cache (keyed by the same signature) means repeated eager
+    backward calls replay the compiled VJP instead of re-tracing the primal
+    through ``jax.vjp`` every step.
+    """
+
+    @jax.jit
+    def bwd(x, kernel, g):
+        _, vjp = jax.vjp(
+            lambda a, b: transpose_conv_unified(a, b, padding), x, kernel
+        )
+        return vjp(g)
+
+    return bwd
+
+
+def _lax_bwd(padding, res, g):
     x, kernel = res
-    _, vjp = jax.vjp(
-        lambda a, b: transpose_conv_unified(a, b, padding), x, kernel
+    fn = _unified_vjp_fn(
+        padding, x.shape, str(x.dtype), kernel.shape, str(kernel.dtype)
     )
-    return vjp(g)
+    return fn(x, kernel, g.astype(jnp.result_type(x, kernel)))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _resolve_bwd(x, kernel, padding):
+    """(method, dx_tile_h, dx_tile_w) for this layer shape.
+
+    Tuned cache entry -> measured winner; cold cache -> Pallas on a real
+    accelerator backend, lax VJP on CPU (where Pallas only interprets).
+    """
+    from repro.kernels import autotune
+
+    entry = autotune.best_bwd(
+        x.shape[0], x.shape[1], kernel.shape[0], kernel.shape[2],
+        kernel.shape[3], padding, str(x.dtype),
+    )
+    if entry is not None:
+        return (
+            entry.get("method", "lax"),
+            entry.get("tile_h"), entry.get("tile_w"),
+        )
+    return ("pallas" if jax.default_backend() == "tpu" else "lax"), None, None
+
+
+def _pallas_bwd(padding, res, g, tile_h=None, tile_w=None):
+    x, kernel = res
+    dx, dw = transpose_conv2d_bwd_pallas(
+        x, kernel, g, padding, tile_h=tile_h, tile_w=tile_w
+    )
+    return dx.astype(x.dtype), dw.astype(kernel.dtype)
+
+
+def _dispatch_bwd(padding, bwd, res, g):
+    if bwd not in BWD_METHODS:
+        raise ValueError(f"unknown bwd {bwd!r}; one of {BWD_METHODS}")
+    x, kernel = res
+    method, bth, btw = bwd, None, None
+    if bwd == "auto":
+        method, bth, btw = _resolve_bwd(x, kernel, padding)
+    if method == "pallas":
+        return _pallas_bwd(padding, res, g, tile_h=bth, tile_w=btw)
+    return _lax_bwd(padding, res, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
 def transpose_conv2d_pallas(
     x, kernel, padding: int = 0, tile_h: int | None = None,
-    tile_w: int | None = None,
+    tile_w: int | None = None, bwd: str = "auto",
 ):
-    """Phase-fused spatially-tiled Pallas forward, lax-unified backward.
+    """Phase-fused spatially-tiled Pallas forward, segregated Pallas/lax
+    backward.
 
-    tile_h/tile_w pin the spatial tiling (e.g. the autotuner's measured
-    winner); None uses the kernel's defaults.
+    tile_h/tile_w pin the forward spatial tiling (e.g. the autotuner's
+    measured winner); None uses the kernel's defaults. ``bwd`` selects the
+    backward implementation: "auto" (per-shape tuned dispatch), "pallas",
+    or "lax".
     """
     return _pallas_fused_fwd(x, kernel, padding, tile_h=tile_h, tile_w=tile_w)
 
 
-def _fused_fwd(x, kernel, padding, tile_h, tile_w):
+def _fused_fwd(x, kernel, padding, tile_h, tile_w, bwd):
     return (
         _pallas_fused_fwd(x, kernel, padding, tile_h=tile_h, tile_w=tile_w),
         (x, kernel),
     )
 
 
-def _fused_bwd(padding, tile_h, tile_w, res, g):
-    return _unified_vjp(padding, res, g)
+def _fused_bwd(padding, tile_h, tile_w, bwd, res, g):
+    return _dispatch_bwd(padding, bwd, res, g)
 
 
 transpose_conv2d_pallas.defvjp(_fused_fwd, _fused_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def transpose_conv2d_pallas_phase(x, kernel, padding: int = 0):
-    """Legacy per-phase-grid Pallas forward, lax-unified backward."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def transpose_conv2d_pallas_phase(
+    x, kernel, padding: int = 0, bwd: str = "auto"
+):
+    """Legacy per-phase-grid Pallas forward, same dispatched backward."""
     return _pallas_phase_fwd(x, kernel, padding)
 
 
-def _phase_fwd(x, kernel, padding):
+def _phase_fwd(x, kernel, padding, bwd):
     return _pallas_phase_fwd(x, kernel, padding), (x, kernel)
 
 
-transpose_conv2d_pallas_phase.defvjp(_phase_fwd, _unified_vjp)
+def _phase_bwd(padding, bwd, res, g):
+    return _dispatch_bwd(padding, bwd, res, g)
+
+
+transpose_conv2d_pallas_phase.defvjp(_phase_fwd, _phase_bwd)

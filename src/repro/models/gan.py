@@ -67,19 +67,26 @@ def generator_init(key, cfg: GANConfig):
     return params
 
 
-def generator_apply(params, cfg: GANConfig, z, *, method: str = "auto"):
+def generator_apply(params, cfg: GANConfig, z, *, method: str = "auto",
+                    train: bool = False):
     """z: (B, z_dim) -> image (B, H, W, C_last) in [-1, 1].
 
     method="auto" (default) dispatches each layer through the autotuner
     cache (repro.kernels.autotune) with the napkin rule as cold-cache
-    fallback; explicit methods pin every layer.
+    fallback; explicit methods pin every layer. ``train=True`` switches
+    the auto dispatch to the jointly-tuned full-train-step winners (and
+    the Pallas layers' custom VJP to its tuned backward) — what the
+    training examples and Table-4 train benchmarks pass when the
+    generator sits under ``jax.grad``.
     """
     h0, c0, _ = cfg.layers[0]
     x = (z @ params["proj"]["w"]).reshape(z.shape[0], h0, h0, c0)
     x = jax.nn.relu(x)
     n = len(cfg.layers)
     for i in range(n):
-        x = tconv_apply(params[f"tconv{i}"], x, cfg.padding, method=method)
+        x = tconv_apply(
+            params[f"tconv{i}"], x, cfg.padding, method=method, train=train
+        )
         x = jnp.tanh(x) if i == n - 1 else jax.nn.relu(x)
     return x
 

@@ -299,17 +299,24 @@ def tconv_init(key, n, cin, cout, *, dtype=jnp.float32):
     }
 
 
-def tconv_apply(p, x, padding: int, *, method: str = "auto"):
+def tconv_apply(p, x, padding: int, *, method: str = "auto",
+                train: bool = False):
     """Stride-2 transpose convolution through the dispatch layer.
 
     method="auto" consults the persistent autotuner cache per layer shape
     (repro.kernels.autotune) — GAN training and the Table-4 benchmarks run
     on whatever operator measured fastest on this backend, including the
-    fused Pallas kernel (whose custom VJP keeps this differentiable).
+    fused Pallas kernel (whose custom VJP dispatches the backward between
+    the segregated Pallas dx/dw kernels and the lax VJP). ``train=True``
+    selects by the jointly-tuned full-train-step winner instead of the
+    forward-only winner — pass it wherever the layer sits under
+    ``jax.grad`` (tune with ``python -m repro.kernels.autotune --train``).
     """
     from repro.core import transpose_conv2d
 
-    return transpose_conv2d(x, p["w"], padding, method=method) + p["b"]
+    return transpose_conv2d(
+        x, p["w"], padding, method=method, train=train
+    ) + p["b"]
 
 
 # ------------------------------------------------------------- dense SwiGLU

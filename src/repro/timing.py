@@ -1,8 +1,9 @@
-"""Wall-time measurement of jit'd callables.
+"""Wall-time measurement of jit'd callables and training loops.
 
-Single source of truth for the timing harness — used by both the autotuner
-(repro.kernels.autotune) and the benchmarks/ package (benchmarks.common
-re-exports it), so their numbers stay comparable.
+Single source of truth for the timing harness — used by the autotuner
+(repro.kernels.autotune), the benchmarks/ package (benchmarks.common
+re-exports it), and the training examples, so their numbers stay
+comparable.
 """
 from __future__ import annotations
 
@@ -22,3 +23,32 @@ def time_fn(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
+
+
+class StepTimer:
+    """Per-step wall-time logger for training loops (examples/train_*).
+
+    ``tick()`` after each (blocked) step returns that step's seconds and
+    appends it to the history; ``mean(skip=...)`` summarizes the
+    steady-state step time with the first ``skip`` steps (compilation)
+    excluded.
+    """
+
+    def __init__(self) -> None:
+        self.steps: list[float] = []
+        self._last = time.perf_counter()
+
+    def tick(self) -> float:
+        now = time.perf_counter()
+        dt = now - self._last
+        self._last = now
+        self.steps.append(dt)
+        return dt
+
+    def mean(self, skip: int = 1) -> float:
+        tail = self.steps[skip:] or self.steps
+        return float(np.mean(tail)) if tail else 0.0
+
+    def median(self, skip: int = 1) -> float:
+        tail = self.steps[skip:] or self.steps
+        return float(np.median(tail)) if tail else 0.0
