@@ -20,14 +20,38 @@ def tmp_cache(tmp_path, monkeypatch):
 
 def test_cache_roundtrip_persists_to_disk():
     key = autotune.layer_key(1, 8, 4, 16, 8, 2)
+    # flat (v1-style) entries are accepted and become the fwd direction
     autotune.record(key, {"method": "unified_reshape", "time_s": 1e-4,
                           "source": "measured"})
     # wipe the in-memory view; lookup must reload from the JSON file
     autotune._STATE.update(mtime=-1.0, entries={})
     entry = autotune.lookup(key)
-    assert entry is not None and entry["method"] == "unified_reshape"
+    assert entry is not None and entry["fwd"]["method"] == "unified_reshape"
+    assert autotune.best_method(1, 8, 4, 16, 8, 2)["method"] == "unified_reshape"
     blob = json.loads(autotune.cache_path().read_text())
-    assert blob["version"] == 1 and key in blob["entries"]
+    assert blob["version"] == 2 and key in blob["entries"]
+
+
+def test_v1_cache_file_migrates_on_load():
+    """Existing $REPRO_AUTOTUNE_CACHE files from the forward-only schema
+    keep answering for the fwd direction; bwd/step stay cold; the next save
+    rewrites the file as v2."""
+    key = autotune.layer_key(1, 8, 4, 16, 8, 2)
+    autotune.cache_path().parent.mkdir(parents=True, exist_ok=True)
+    autotune.cache_path().write_text(json.dumps({
+        "version": 1,
+        "entries": {key: {"method": "unified_matmul", "time_s": 2e-4,
+                          "source": "measured"}},
+    }))
+    assert autotune.best_method(1, 8, 4, 16, 8, 2)["method"] == "unified_matmul"
+    assert autotune.best_bwd(1, 8, 4, 16, 8, 2) is None
+    # recording any direction persists the migrated record as v2
+    autotune.record(key, {"method": "lax", "time_s": 1e-4,
+                          "source": "measured"}, direction="bwd")
+    blob = json.loads(autotune.cache_path().read_text())
+    assert blob["version"] == 2
+    assert blob["entries"][key]["fwd"]["method"] == "unified_matmul"
+    assert blob["entries"][key]["bwd"]["method"] == "lax"
 
 
 def test_layer_key_includes_backend_and_dtype():
@@ -38,25 +62,76 @@ def test_layer_key_includes_backend_and_dtype():
 
 
 def test_tune_layer_records_measured_winner():
-    entry = autotune.tune_layer(1, 6, 4, 4, 4, 2, repeats=2, warmup=1)
+    rec = autotune.tune_layer(1, 6, 4, 4, 4, 2, repeats=2, warmup=1)
+    entry = rec["fwd"]
     assert entry["method"] in entry["candidates"]
     assert entry["time_s"] == min(entry["candidates"].values()) > 0
     # on CPU the Pallas kernels compete via the roofline proxy only
     assert set(entry["proxy"]) == {"pallas_fused", "pallas_phase"}
+    # forward-only tuning leaves the training directions cold
+    assert "bwd" not in rec and "step" not in rec
     # and the cache now answers for this exact shape
     hit = autotune.best_method(1, 6, 4, 4, 4, 2)
     assert hit is not None and hit["method"] == entry["method"]
 
 
+def test_tune_layer_train_records_bwd_and_step():
+    """train=True tunes the whole training step: the bwd direction (Pallas
+    backward vs lax VJP) and the full value_and_grad race per fwd method."""
+    rec = autotune.tune_layer(1, 6, 4, 4, 4, 2, repeats=2, warmup=1,
+                              train=True)
+    bwd = rec["bwd"]
+    # on CPU the Pallas backward competes via the roofline proxy only
+    assert bwd["method"] == "lax" and set(bwd["proxy"]) == {"pallas", "lax"}
+    assert bwd["time_s"] == min(bwd["candidates"].values()) > 0
+    step = rec["step"]
+    assert step["method"] in step["candidates"]
+    assert step["time_s"] == min(step["candidates"].values()) > 0
+    # the cache answers per direction
+    assert autotune.best_bwd(1, 6, 4, 4, 4, 2)["method"] == "lax"
+    assert autotune.best_entry(1, 6, 4, 4, 4, 2)["step"] == step
+
+
+def test_train_dispatch_prefers_step_winner(monkeypatch):
+    """method='auto', train=True dispatches to the jointly-tuned step
+    winner even when the forward-only winner differs."""
+    key = autotune.layer_key(1, 6, 4, 2, 3, 2)
+    autotune.record(key, {
+        "fwd": {"method": "conventional", "time_s": 1e-4, "source": "test"},
+        "step": {"method": "unified_matmul", "time_s": 2e-4,
+                 "source": "test"},
+    })
+    calls = []
+    orig = tc.METHODS["unified_matmul"]
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setitem(tc.METHODS, "unified_matmul", spy)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 6, 6, 2)),
+                    dtype=jnp.float32)
+    k = jnp.asarray(np.random.default_rng(1).normal(size=(4, 4, 2, 3)),
+                    dtype=jnp.float32)
+    want = ref.conventional_ref(x, k, 2)
+    got = tc.transpose_conv2d(x, k, 2, method="auto", train=True)
+    assert calls, "train dispatch must pick the step winner"
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # inference dispatch still follows the fwd winner
+    calls.clear()
+    tc.transpose_conv2d(x, k, 2, method="auto")
+    assert not calls
+
+
 def test_auto_dispatch_consults_cache(monkeypatch):
     calls = []
-    orig = autotune.best_method
+    orig = autotune.best_entry
 
     def spy(*a, **kw):
         calls.append(a)
         return orig(*a, **kw)
 
-    monkeypatch.setattr(autotune, "best_method", spy)
+    monkeypatch.setattr(autotune, "best_entry", spy)
     x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 6, 6, 2)),
                     dtype=jnp.float32)
     k = jnp.asarray(np.random.default_rng(1).normal(size=(4, 4, 2, 3)),
@@ -103,17 +178,60 @@ def test_foreign_cache_version_resets_in_memory_view():
     assert autotune.lookup(key) is None  # stale view must not be pinned
 
 
+def test_foreign_cache_version_is_preserved_on_save():
+    """Saving over a newer tool's cache must set it aside, not destroy it."""
+    key = autotune.layer_key(1, 8, 4, 16, 8, 2)
+    foreign = {"version": 99, "entries": {key: {"method": "conventional"}}}
+    autotune.cache_path().parent.mkdir(parents=True, exist_ok=True)
+    autotune.cache_path().write_text(json.dumps(foreign))
+    autotune.record(key, {"method": "unified_reshape", "time_s": 1e-4,
+                          "source": "measured"})
+    blob = json.loads(autotune.cache_path().read_text())
+    assert blob["version"] == 2
+    bak = autotune.cache_path().with_name(
+        autotune.cache_path().name + ".v99.bak"
+    )
+    assert json.loads(bak.read_text()) == foreign
+
+
+def test_step_race_measures_pallas_fused_at_recorded_tiles(monkeypatch):
+    """The step race must time pallas_fused at the SAME tiles the entry
+    records (the fwd race's winner) — otherwise train-mode dispatch replays
+    a configuration whose value_and_grad time was never measured."""
+    from repro.kernels import ops
+
+    seen = []
+    orig = ops.transpose_conv2d_pallas
+
+    def spy(x, k, padding=0, tile_h=None, tile_w=None, bwd="auto"):
+        seen.append((tile_h, tile_w))
+        return orig(x, k, padding, tile_h, tile_w, bwd)
+
+    monkeypatch.setattr(ops, "transpose_conv2d_pallas", spy)
+    rec = autotune.tune_layer(
+        1, 6, 4, 2, 2, 2, repeats=1, warmup=0, include_pallas=True,
+        methods=("unified_reshape", "pallas_fused"), train=True,
+    )
+    step = rec["step"]
+    assert "pallas_fused" in step["candidates"]
+    # the step race must pin concrete raced tiles (the fwd winner), never
+    # fall through to kernel defaults via (None, None)
+    assert seen and all(t in autotune._FUSED_TILES for t in seen), seen
+    if step["method"] == "pallas_fused":
+        assert (step["tile_h"], step["tile_w"]) in seen
+
+
 def test_in_process_retuning_invalidates_auto_trace(monkeypatch):
     """record() bumps the cache generation, which is part of the jit key for
     method='auto' — new winners take effect without a process restart."""
     calls = []
-    orig = autotune.best_method
+    orig = autotune.best_entry
 
     def spy(*a, **kw):
         calls.append(a)
         return orig(*a, **kw)
 
-    monkeypatch.setattr(autotune, "best_method", spy)
+    monkeypatch.setattr(autotune, "best_entry", spy)
     x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 6, 6, 2)),
                     dtype=jnp.float32)
     k = jnp.asarray(np.random.default_rng(1).normal(size=(4, 4, 2, 3)),
@@ -160,3 +278,22 @@ def test_roofline_fused_beats_phase_on_gan_layers():
                 "pallas_phase", 1, hw, cfg.kernel, cin, cout, cfg.padding
             )
             assert fused <= phase, (cfg.name, hw, cin, cout, fused, phase)
+
+
+def test_bwd_roofline_pallas_beats_lax_on_gan_layers():
+    """The segregated Pallas backward reads tiles once for all four phases
+    and keeps its accumulators VMEM-resident; the lax VJP re-materializes
+    per-phase buffers and over-computes the conv input-grad zero frame. The
+    proxy must prefer the Pallas backward on every Table-4 layer shape —
+    the bench's bwd_pallas >= bwd_lax gate."""
+    from repro.models.gan import GAN_ZOO
+
+    for cfg in GAN_ZOO.values():
+        for hw, cin, cout in cfg.layers:
+            pallas, _tiles = autotune.best_bwd_proxy(
+                1, hw, cfg.kernel, cin, cout, cfg.padding
+            )
+            lax_s = autotune.bwd_roofline_proxy(
+                "lax", 1, hw, cfg.kernel, cin, cout, cfg.padding
+            )
+            assert pallas <= lax_s, (cfg.name, hw, cin, cout, pallas, lax_s)
