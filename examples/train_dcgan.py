@@ -2,12 +2,15 @@
 unified kernel-segregated transpose convolution — the paper's own workload.
 
 Non-saturating GAN loss on synthetic band-limited images, AdamW for both
-nets, a few hundred steps on CPU. The generator defaults to the
-**jointly-tuned** dispatch path (``method="auto"`` in training mode: the
-autotuner's full-train-step winners, with the Pallas layers' custom VJP
-dispatching between the segregated Pallas backward and the lax VJP);
-``--tune`` pre-populates the cache for the reduced layer shapes before the
-train step is traced. Per-step wall time is logged via
+nets, a few hundred steps on CPU. The generator runs on a **compiled
+execution plan** (:mod:`repro.kernels.plan`): the whole layer stack's
+dispatch — forward method + tiles, backward method + tiles per layer — is
+resolved ONCE from the autotune cache (``train=True``: the jointly-tuned
+full-train-step winners) before the train step is traced, and the step
+closes over the immutable plan; no per-call cache consult ever runs inside
+the training loop. ``--tune`` pre-populates the cache for the reduced layer
+shapes first, so the plan compiles against measured winners instead of the
+cold-cache napkin rule. Per-step wall time is logged via
 :class:`repro.timing.StepTimer`, so the example doubles as an end-to-end
 training-speed repro.
 
@@ -66,7 +69,15 @@ def main():
                   f"fwd={rec['fwd']['method']} bwd={rec['bwd']['method']} "
                   f"step={rec['step']['method']}")
 
+    # compile the whole generator's execution plan ONCE, after tuning and
+    # before the train step is traced: the step closes over the immutable
+    # plan, so dispatch work never runs inside the loop and retuning can
+    # only take effect through an explicit recompile
     gp = gan.generator_init(jax.random.key(0), cfg)
+    train_plan = gan.generator_plan(
+        cfg, args.batch, train=True, method=args.method
+    )
+    print(train_plan.describe())
     dp = gan.discriminator_init(jax.random.key(1), out_hw, out_c)
     opt_cfg = AdamWConfig(lr=2e-4, b1=0.5, b2=0.999, weight_decay=0.0)
     g_opt = adamw_init(gp, opt_cfg)
@@ -75,7 +86,7 @@ def main():
                            global_batch=args.batch)
 
     def d_loss_fn(dp, gp, real, z):
-        fake = gan.generator_apply(gp, cfg, z, method=args.method, train=True)
+        fake = gan.generator_apply(gp, cfg, z, plan=train_plan)
         d_real = gan.discriminator_apply(dp, real)
         d_fake = gan.discriminator_apply(dp, fake)
         return (
@@ -84,7 +95,7 @@ def main():
         )
 
     def g_loss_fn(gp, dp, z):
-        fake = gan.generator_apply(gp, cfg, z, method=args.method, train=True)
+        fake = gan.generator_apply(gp, cfg, z, plan=train_plan)
         return jnp.mean(jax.nn.softplus(-gan.discriminator_apply(dp, fake)))
 
     @jax.jit
@@ -110,9 +121,11 @@ def main():
                   f"(mean {timer.mean() * 1e3:.1f}ms)")
     print(f"[dcgan] steady-state step time: mean {timer.mean() * 1e3:.2f}ms "
           f"median {timer.median() * 1e3:.2f}ms over {len(timer.steps)} steps")
+    # eval plan: batch 1, inference-mode winners (fwd entries, not step)
+    eval_plan = gan.generator_plan(cfg, 1, method=args.method)
     img = gan.generator_apply(
         gp, cfg, jax.random.normal(jax.random.key(9), (1, cfg.z_dim)),
-        method=args.method,
+        plan=eval_plan,
     )
     print(f"[dcgan] done: sample range [{float(img.min()):.3f}, "
           f"{float(img.max()):.3f}], finite={bool(jnp.all(jnp.isfinite(img)))}")

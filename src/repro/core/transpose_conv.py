@@ -199,54 +199,28 @@ def transpose_conv_auto(x, kernel, padding: int = 0, *, precision=None,
                         train: bool = False):
     """Measured per-layer method selection (HUGE²-style dispatch).
 
-    Consults the persistent autotuner cache (:mod:`repro.kernels.autotune`)
-    for this exact (backend, batch, N, n, Cin, Cout, P, dtype) layer shape —
-    a hit dispatches to the measured winner (including the Pallas kernels,
-    which keep their custom VJP via :mod:`repro.kernels.ops`). In
-    **training** mode (``train=True``) the jointly-tuned ``step`` entry —
-    the forward method whose full fwd+bwd ``value_and_grad`` measured
-    fastest — takes precedence over the forward-only winner, so a forward
-    that is fast to run but slow to differentiate loses dispatch. Cold
-    cache falls back to the old §Perf napkin rule: the segregated form wins
-    whenever the per-phase GEMM has enough rows (M = ceil(out/2)^2); below
-    that (the 4x4/8x8 GAN head layers at batch 1) the single big
-    conventional GEMM is faster on CPU because XLA's skinny-M GEMM
-    efficiency collapses.
+    Thin wrapper over the plan subsystem (:mod:`repro.kernels.plan`): it
+    resolves a single-layer plan from the persistent autotuner cache for
+    this exact (backend, batch, N, n, Cin, Cout, P, dtype) layer shape and
+    executes it. A cache hit dispatches to the measured winner (including
+    the Pallas kernels, which keep their custom VJP via
+    :mod:`repro.kernels.ops`). In **training** mode (``train=True``) the
+    jointly-tuned ``step`` entry — the forward method whose full fwd+bwd
+    ``value_and_grad`` measured fastest — takes precedence over the
+    forward-only winner, so a forward that is fast to run but slow to
+    differentiate loses dispatch. Cold cache falls back to the old §Perf
+    napkin rule: the segregated form wins whenever the per-phase GEMM has
+    enough rows (M = ceil(out/2)^2); below that (the 4x4/8x8 GAN head
+    layers at batch 1) the single big conventional GEMM is faster on CPU
+    because XLA's skinny-M GEMM efficiency collapses.
     """
-    from repro.kernels import autotune
+    from repro.kernels import plan as planlib
 
-    rec = autotune.best_entry(
+    lp = planlib.plan_layer_cached(
         x.shape[0], x.shape[1], kernel.shape[0], kernel.shape[2],
-        kernel.shape[3], padding, str(x.dtype),
+        kernel.shape[3], padding, str(x.dtype), method="auto", train=train,
     )
-    entry = None
-    if rec is not None:
-        entry = (rec.get("step") if train else None) or rec.get("fwd")
-    if entry is not None:
-        method = entry["method"]
-        if method.startswith("pallas"):
-            from repro.kernels import ops
-
-            if method == "pallas_phase":
-                return ops.transpose_conv2d_pallas_phase(x, kernel, padding)
-            # step winners carry the fwd race's tiles; fall back to the
-            # fwd entry's tiles when only the fwd direction was tuned
-            fwd = rec.get("fwd") or {}
-            return ops.transpose_conv2d_pallas(
-                x, kernel, padding,
-                entry.get("tile_h", fwd.get("tile_h")),
-                entry.get("tile_w", fwd.get("tile_w")),
-            )
-        fn = METHODS.get(method)
-        if fn is not None and fn is not transpose_conv_auto:
-            return fn(x, kernel, padding, precision=precision)
-    # cold cache: the old napkin rule
-    m = seg.output_size(x.shape[1], kernel.shape[0], padding)
-    if (m + 1) // 2 >= 8:
-        return transpose_conv_unified_reshape(
-            x, kernel, padding, precision=precision
-        )
-    return transpose_conv_conventional(x, kernel, padding, precision=precision)
+    return planlib.execute_layer(lp, x, kernel, precision=precision)
 
 
 def transpose_conv_unified_matmul(x, kernel, padding: int = 0, *,
@@ -318,33 +292,44 @@ def transpose_conv2d(
     method: str = "unified",
     precision=None,
     train: bool = False,
+    plan=None,
 ) -> jnp.ndarray:
     """Stride-2 transpose convolution, paper semantics. See module docstring.
 
-    For ``method="auto"`` — and for the explicit Pallas methods, whose
-    custom VJP consults the cache's ``bwd`` entry at trace time — the
-    autotuner cache *generation* is part of the jit key: tuning within a
-    live process invalidates previously traced dispatch decisions instead
-    of silently keeping the stale winner. ``train=True`` makes ``auto``
-    prefer the jointly-tuned full-train-step winner (see
-    :func:`transpose_conv_auto`); it is a no-op for explicit methods.
+    Dispatch flows through compiled plans (:mod:`repro.kernels.plan`):
+    ``method="auto"`` and the explicit Pallas methods build (and memoize,
+    per layer signature and autotune-cache generation) a single-layer
+    :class:`~repro.kernels.plan.LayerPlan`, and **jit keys on the plan
+    value** — retuning within a live process yields a new plan and a fresh
+    trace, while cache touches that don't change the decision share the old
+    trace. Passing ``plan=`` (a pre-compiled ``LayerPlan``) skips the cache
+    consult entirely — the compile-once path used by
+    ``generator_apply(plan=...)``. ``train=True`` makes ``auto`` prefer the
+    jointly-tuned full-train-step winner (see :func:`transpose_conv_auto`);
+    it is a no-op for explicit methods.
     """
-    epoch = 0
-    if method in ("auto", "pallas", "pallas_fused", "pallas_phase"):
-        from repro.kernels import autotune
+    if plan is None and method in (
+        "auto", "pallas", "pallas_fused", "pallas_phase"
+    ):
+        from repro.kernels import plan as planlib
 
-        epoch = autotune.generation()
+        plan = planlib.plan_layer_cached(
+            x.shape[0], x.shape[1], kernel.shape[0], kernel.shape[2],
+            kernel.shape[3], padding, str(x.dtype), method=method,
+            train=train,
+        )
+    if plan is not None and plan.padding != padding:
+        raise ValueError(
+            f"plan was compiled for padding={plan.padding}, got {padding}"
+        )
     return _transpose_conv2d_jit(
-        x, kernel, padding, method=method, precision=precision, train=train,
-        _dispatch_epoch=epoch,
+        x, kernel, padding, method=method, precision=precision, plan=plan
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=(
-        "padding", "method", "precision", "train", "_dispatch_epoch",
-    ),
+    static_argnames=("padding", "method", "precision", "plan"),
 )
 def _transpose_conv2d_jit(
     x: jnp.ndarray,
@@ -353,22 +338,16 @@ def _transpose_conv2d_jit(
     *,
     method: str = "unified",
     precision=None,
-    train: bool = False,
-    _dispatch_epoch: int = 0,
+    plan=None,
 ) -> jnp.ndarray:
-    # local imports: keep Pallas optional at import time
-    if method in ("pallas", "pallas_fused"):
-        from repro.kernels import ops
+    if plan is not None:
+        # local import: keeps Pallas optional at import time, and the
+        # module-attr lookup lets tests spy on execute_layer (trace counts)
+        from repro.kernels import plan as planlib
 
-        return ops.transpose_conv2d_pallas(x, kernel, padding)
-    if method == "pallas_phase":
-        from repro.kernels import ops
-
-        return ops.transpose_conv2d_pallas_phase(x, kernel, padding)
-    if method == "auto":
-        return transpose_conv_auto(
-            x, kernel, padding, precision=precision, train=train
-        )
+        return planlib.execute_layer(plan, x, kernel, precision=precision)
+    # plan-building in transpose_conv2d covers "auto" and the Pallas
+    # spellings, so only the explicit lax methods reach this point
     try:
         fn = METHODS[method]
     except KeyError:

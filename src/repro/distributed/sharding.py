@@ -183,6 +183,69 @@ def shard_batch(x):
     return constrain(x, BATCH, *([None] * (x.ndim - 1)))
 
 
+def _shard_map_fn():
+    """``shard_map`` across its historical homes, with the rep-check kwarg
+    name normalized (``check_rep`` -> ``check_vma`` after 0.4.x)."""
+    import inspect
+
+    try:  # moved to jax.shard_map after 0.4.x
+        from jax import shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+
+    params = inspect.signature(shard_map).parameters
+    kw = "check_vma" if "check_vma" in params else "check_rep"
+    return shard_map, {kw: False}
+
+
+def shard_plan_apply(apply_fn, params, z, plan, *, mesh=None):
+    """Run a compiled :class:`repro.kernels.plan.TconvPlan` generator under
+    ``shard_map``, batch-sharded over the data-parallel mesh axes.
+
+    ``apply_fn(params, z, plan) -> out`` with the leading axis of ``z`` and
+    ``out`` being the batch (e.g. ``lambda p, z, plan:
+    generator_apply(p, cfg, z, plan=plan)``). The plan is closed over as a
+    static value, so every shard executes the exact operator stack the plan
+    compiled — the per-shard trace never re-consults the autotune cache,
+    and the shard-mapped generator traces exactly once per (plan, shapes).
+    Parameters are replicated; only the batch is split.
+
+    Degrades gracefully: with no mesh (or no ``pod``/``data`` axis, or a
+    batch the data-parallel extent doesn't divide) it runs ``apply_fn``
+    unsharded — the exact same code serves single-device tests and the
+    multi-chip dry-run, like every other helper here.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh = mesh if mesh is not None else get_abstract_mesh()
+    if mesh is None:
+        return apply_fn(params, z, plan)
+    axes = tuple(mesh.axis_names)
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    sizes = mesh_axis_sizes(mesh)
+    n_shards = 1
+    for a in dp:
+        n_shards *= sizes[a]
+    if not dp or n_shards <= 0 or z.shape[0] % n_shards:
+        return apply_fn(params, z, plan)
+
+    shard_map, no_rep_check = _shard_map_fn()
+
+    def local_fn(p, zl):
+        return apply_fn(p, zl, plan)
+
+    # short specs: shard_map treats missing trailing dims as replicated, so
+    # P(dp) means "batch-leading, everything else replicated" for any rank
+    fn = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(), P(dp)),
+        out_specs=P(dp),
+        **no_rep_check,
+    )
+    return fn(params, z)
+
+
 # ---------------------------------------------------------------------------
 # Parameter sharding rules, keyed by parameter path (joined with '/').
 # Order matters: first regex match wins.
@@ -280,7 +343,7 @@ def param_specs(params, fsdp: bool = False):
 
     paths = dict(_leaf_paths(params))
     flat, treedef = jax.tree_util.tree_flatten(params)
-    specs = [one(p, l) for p, l in paths.items()]
+    specs = [one(path, leaf) for path, leaf in paths.items()]
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 

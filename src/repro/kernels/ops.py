@@ -11,12 +11,17 @@ custom VJP dispatches per layer shape between
   ``(padding, shapes, dtypes)`` instead of re-tracing ``jax.vjp`` on every
   backward call).
 
-``bwd="auto"`` consults the autotuner's per-direction cache
-(:func:`repro.kernels.autotune.best_bwd`): a tuned entry picks the measured
-winner (with its dx tiles); a cold cache defaults to the Pallas backward on
-a real accelerator backend and the lax VJP elsewhere (interpret-mode Pallas
-is Python-speed). Used by the GAN generators in models/gan.py, including
-under the autotuned dispatch of ``transpose_conv_auto``.
+The backward selector ``bwd`` is either a :class:`repro.kernels.plan.LayerPlan`
+— the compiled-plan path: the plan already carries the resolved backward
+method + dx tiles, so NO cache consult happens here at all — or one of the
+legacy strings: ``"auto"`` consults the autotuner's per-direction cache
+(:func:`repro.kernels.autotune.best_bwd`, memoized per (layer signature,
+cache generation) so repeated eager backward calls don't re-query the cache
+file), with a cold cache defaulting to the Pallas backward on a real
+accelerator backend and the lax VJP elsewhere (interpret-mode Pallas is
+Python-speed); ``"pallas"``/``"lax"`` pin the implementation. Used by the
+GAN generators in models/gan.py through the plan subsystem
+(:mod:`repro.kernels.plan`).
 """
 from __future__ import annotations
 
@@ -26,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.transpose_conv import transpose_conv_unified
+from repro.kernels.plan import LayerPlan, _cold_bwd
 from repro.kernels.transpose_conv2d import (
     transpose_conv2d_pallas as _pallas_fused_fwd,
     transpose_conv2d_pallas_phase as _pallas_phase_fwd,
@@ -62,24 +68,38 @@ def _lax_bwd(padding, res, g):
     return fn(x, kernel, g.astype(jnp.result_type(x, kernel)))
 
 
-def _resolve_bwd(x, kernel, padding):
-    """(method, dx_tile_h, dx_tile_w) for this layer shape.
-
-    Tuned cache entry -> measured winner; cold cache -> Pallas on a real
-    accelerator backend, lax VJP on CPU (where Pallas only interprets).
-    """
+@functools.lru_cache(maxsize=None)
+def _resolve_bwd_cached(b, n_in, n_k, cin, cout, padding, dtype, epoch):
+    """Memoized (method, dx_tile_h, dx_tile_w) per (layer signature, cache
+    generation). ``epoch`` is only a memo key: the generation counter is
+    monotonic and bumps on every cache mutation, so a stale resolution can
+    never be replayed after a retune."""
+    del epoch
     from repro.kernels import autotune
 
-    entry = autotune.best_bwd(
-        x.shape[0], x.shape[1], kernel.shape[0], kernel.shape[2],
-        kernel.shape[3], padding, str(x.dtype),
-    )
+    entry = autotune.best_bwd(b, n_in, n_k, cin, cout, padding, dtype)
     if entry is not None:
         return (
             entry.get("method", "lax"),
             entry.get("tile_h"), entry.get("tile_w"),
         )
-    return ("pallas" if jax.default_backend() == "tpu" else "lax"), None, None
+    return _cold_bwd(), None, None
+
+
+def _resolve_bwd(x, kernel, padding):
+    """(method, dx_tile_h, dx_tile_w) for this layer shape.
+
+    Tuned cache entry -> measured winner; cold cache -> Pallas on a real
+    accelerator backend, lax VJP on CPU (where Pallas only interprets).
+    Legacy path only — plan-resolved layers carry their backward in the
+    :class:`LayerPlan` and never get here.
+    """
+    from repro.kernels import autotune
+
+    return _resolve_bwd_cached(
+        x.shape[0], x.shape[1], kernel.shape[0], kernel.shape[2],
+        kernel.shape[3], padding, str(x.dtype), autotune.generation(),
+    )
 
 
 def _pallas_bwd(padding, res, g, tile_h=None, tile_w=None):
@@ -91,12 +111,17 @@ def _pallas_bwd(padding, res, g, tile_h=None, tile_w=None):
 
 
 def _dispatch_bwd(padding, bwd, res, g):
-    if bwd not in BWD_METHODS:
-        raise ValueError(f"unknown bwd {bwd!r}; one of {BWD_METHODS}")
     x, kernel = res
-    method, bth, btw = bwd, None, None
-    if bwd == "auto":
+    if isinstance(bwd, LayerPlan):  # plan-resolved: no cache consult at all
+        method, bth, btw = bwd.bwd_method, bwd.bwd_tile_h, bwd.bwd_tile_w
+    elif bwd == "auto":
         method, bth, btw = _resolve_bwd(x, kernel, padding)
+    elif bwd in BWD_METHODS:
+        method, bth, btw = bwd, None, None
+    else:
+        raise ValueError(
+            f"unknown bwd {bwd!r}; one of {BWD_METHODS} or a LayerPlan"
+        )
     if method == "pallas":
         return _pallas_bwd(padding, res, g, tile_h=bth, tile_w=btw)
     return _lax_bwd(padding, res, g)
@@ -112,8 +137,9 @@ def transpose_conv2d_pallas(
 
     tile_h/tile_w pin the forward spatial tiling (e.g. the autotuner's
     measured winner); None uses the kernel's defaults. ``bwd`` selects the
-    backward implementation: "auto" (per-shape tuned dispatch), "pallas",
-    or "lax".
+    backward implementation: a :class:`~repro.kernels.plan.LayerPlan`
+    (plan-resolved backward, no cache consult), "auto" (per-shape tuned
+    dispatch, memoized per cache generation), "pallas", or "lax".
     """
     return _pallas_fused_fwd(x, kernel, padding, tile_h=tile_h, tile_w=tile_w)
 

@@ -1,0 +1,278 @@
+"""Compile-once execution plans for the transpose-conv dispatch stack.
+
+Before this module existed, every ``transpose_conv2d(method="auto")`` call
+re-consulted the autotune cache at trace time, re-resolved the backward
+method inside the custom VJP, and keyed jit on a mutable ``_dispatch_epoch``
+counter — per-call dispatch overhead one level above the kernels, exactly
+the per-piece launch overhead the paper's unified kernel removes one level
+below. HUGE² (arXiv:1907.11210) and GANAX (arXiv:1806.01107) both plan a
+whole generator's layer sequence ahead of execution instead of deciding
+per-op; this module is that planning step:
+
+* :class:`LayerPlan` — an immutable, hashable record of EVERYTHING dispatch
+  needs for one layer: the layer signature (batch, N, n, Cin, Cout, P,
+  dtype) plus the resolved forward method (+ fused-kernel tiles) and the
+  resolved backward method (+ dx tiles). Being hashable, it is a valid
+  static jit argument: **jit keys on the plan value**, so two cache
+  generations that resolve to the same decisions share one trace (the old
+  epoch key retraced on every cache touch, even a no-op one).
+* :class:`TconvPlan` — an ordered stack of ``LayerPlan``s for a whole
+  generator, compiled **once** from the autotune cache (plus the cold-cache
+  napkin rule) via :func:`compile_plan`.
+* :func:`execute_layer` — runs one resolved layer. It is called at trace
+  time only; no cache consult, no import, no file stat happens on the hot
+  path. Pallas methods flow through :mod:`repro.kernels.ops` with the plan
+  itself as the backward selector, so the custom VJP skips
+  ``_resolve_bwd`` entirely.
+* :func:`plan_layer` / :func:`plan_layer_cached` — single-layer resolution;
+  the cached variant memoizes per (layer signature, cache generation) and
+  is what the legacy ``transpose_conv2d(method="auto")`` wrapper uses, so
+  repeated eager calls build the plan once per cache state.
+
+Resolution rules (identical to the dispatch they replace):
+
+* ``method="auto"`` — the tuned ``step`` entry in training mode, else the
+  tuned ``fwd`` entry; cold cache falls back to the §Perf napkin rule
+  (segregated form iff the per-phase GEMM has ``ceil(M/2) >= 8`` rows).
+* explicit ``pallas``/``pallas_fused``/``pallas_phase`` — the method is
+  pinned; tuned fused tiles are still picked up when the cache has them.
+* backward — the tuned ``bwd`` entry (method + dx tiles); cold cache
+  defaults to the segregated Pallas backward on a real accelerator backend
+  and the lax VJP elsewhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+
+from repro.core import segregation as seg
+
+# forward methods that resolve through plans (everything the autotuner can
+# pick, plus the explicit Pallas spellings)
+PLANNED_METHODS = ("auto", "pallas", "pallas_fused", "pallas_phase")
+_PALLAS_FWD = ("pallas", "pallas_fused", "pallas_phase")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """Resolved dispatch for ONE transpose-conv layer. Immutable + hashable
+    — usable directly as a static jit argument."""
+
+    # layer signature
+    batch: int
+    n_in: int
+    n_k: int
+    cin: int
+    cout: int
+    padding: int
+    dtype: str = "float32"
+    # resolved forward
+    method: str = "unified_reshape"
+    tile_h: int | None = None     # fused Pallas forward spatial tiles
+    tile_w: int | None = None
+    # resolved backward
+    bwd_method: str = "lax"
+    bwd_tile_h: int | None = None  # Pallas dx spatial tiles
+    bwd_tile_w: int | None = None
+    # provenance: "tuned" (autotune cache hit) or "cold" (napkin rule).
+    # compare=False keeps it out of eq/hash: a cold->tuned transition that
+    # resolves to the identical dispatch decision must share the jit trace.
+    source: str = dataclasses.field(default="cold", compare=False)
+
+    def describe(self) -> str:
+        tiles = (f"[{self.tile_h}x{self.tile_w}]"
+                 if self.tile_h is not None else "")
+        btiles = (f"[{self.bwd_tile_h}x{self.bwd_tile_w}]"
+                  if self.bwd_tile_h is not None else "")
+        return (
+            f"{self.n_in}x{self.n_in}x{self.cin}->{self.cout} "
+            f"k{self.n_k} p{self.padding} b{self.batch} {self.dtype}: "
+            f"fwd={self.method}{tiles} bwd={self.bwd_method}{btiles} "
+            f"({self.source})"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TconvPlan:
+    """An ordered stack of :class:`LayerPlan`s for a whole generator.
+
+    Immutable and hashable: close over it (or pass it as a static jit
+    argument) and the traced computation is pinned — per-call dispatch is
+    gone and retuning can only take effect through an explicit recompile
+    (see docs/ARCHITECTURE.md: compile -> execute -> retune -> recompile).
+    """
+
+    name: str
+    layers: tuple  # tuple[LayerPlan, ...]
+
+    def __len__(self) -> int:
+        return len(self.layers)
+
+    def __iter__(self):
+        return iter(self.layers)
+
+    def __getitem__(self, i) -> LayerPlan:
+        return self.layers[i]
+
+    def describe(self) -> str:
+        head = f"TconvPlan({self.name}, {len(self.layers)} layers)"
+        return "\n".join([head] + [
+            f"  [{i}] {lp.describe()}" for i, lp in enumerate(self.layers)
+        ])
+
+
+def _cold_fwd(n_in: int, n_k: int, padding: int) -> str:
+    """The §Perf napkin rule the autotuner falls back to when cold."""
+    m = seg.output_size(n_in, n_k, padding)
+    return "unified_reshape" if (m + 1) // 2 >= 8 else "conventional"
+
+
+def _cold_bwd() -> str:
+    """Cold backward default: Pallas on a real accelerator, lax VJP on CPU
+    (where Pallas only interprets at Python speed)."""
+    return "pallas" if jax.default_backend() == "tpu" else "lax"
+
+
+def _known_fwd(method: str) -> bool:
+    from repro.core import transpose_conv as tc
+
+    if method in _PALLAS_FWD:
+        return True
+    fn = tc.METHODS.get(method)
+    return fn is not None and fn is not tc.transpose_conv_auto
+
+
+def plan_layer(
+    b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int,
+    dtype: str = "float32", *, method: str = "auto", train: bool = False,
+) -> LayerPlan:
+    """Resolve one layer's dispatch from the autotune cache (or cold rules).
+
+    This is the ONLY place the plan subsystem consults the cache; it runs
+    at plan-compile time, never per executed call. ``method="auto"`` follows
+    the tuned winner (``step`` in training mode, else ``fwd``); explicit
+    methods are pinned but still pick up tuned fused tiles / the tuned
+    backward entry.
+    """
+    from repro.kernels import autotune
+
+    rec = autotune.best_entry(b, n_in, n_k, cin, cout, padding, dtype) or {}
+    fwd = rec.get("fwd") or {}
+    source = "cold"
+    tile_h = tile_w = None
+    if method == "auto":
+        entry = (rec.get("step") if train else None) or fwd or None
+        if entry is not None and _known_fwd(entry.get("method", "")):
+            resolved = entry["method"]
+            # step winners carry the fwd race's tiles; fall back to the fwd
+            # entry's tiles when only the fwd direction was tuned
+            tile_h = entry.get("tile_h", fwd.get("tile_h"))
+            tile_w = entry.get("tile_w", fwd.get("tile_w"))
+            source = "tuned"
+        else:
+            resolved = _cold_fwd(n_in, n_k, padding)
+    else:
+        if not _known_fwd(method):
+            raise ValueError(f"unknown method {method!r} for LayerPlan")
+        resolved = "pallas_fused" if method == "pallas" else method
+        if resolved == "pallas_fused" and fwd.get("method") == "pallas_fused":
+            tile_h, tile_w = fwd.get("tile_h"), fwd.get("tile_w")
+            source = "tuned"  # pinned method, but tiles came from the cache
+    if resolved not in ("pallas_fused", "pallas"):
+        tile_h = tile_w = None
+
+    bwd = rec.get("bwd")
+    if bwd is not None:
+        bwd_method = bwd.get("method", "lax")
+        bwd_tile_h, bwd_tile_w = bwd.get("tile_h"), bwd.get("tile_w")
+    else:
+        bwd_method = _cold_bwd()
+        bwd_tile_h = bwd_tile_w = None
+
+    return LayerPlan(
+        batch=b, n_in=n_in, n_k=n_k, cin=cin, cout=cout, padding=padding,
+        dtype=dtype, method=resolved, tile_h=tile_h, tile_w=tile_w,
+        bwd_method=bwd_method, bwd_tile_h=bwd_tile_h, bwd_tile_w=bwd_tile_w,
+        source=source,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _plan_layer_cached(
+    b, n_in, n_k, cin, cout, padding, dtype, method, train, epoch
+) -> LayerPlan:
+    del epoch  # part of the memo key only: new cache generation -> new entry
+    return plan_layer(
+        b, n_in, n_k, cin, cout, padding, dtype, method=method, train=train
+    )
+
+
+def plan_layer_cached(
+    b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int,
+    dtype: str = "float32", *, method: str = "auto", train: bool = False,
+) -> LayerPlan:
+    """Memoized :func:`plan_layer`, keyed by (signature, cache generation).
+
+    The legacy per-call wrapper (``transpose_conv2d(method="auto")``) goes
+    through this: within one cache generation a layer signature resolves
+    exactly once, and a retune (generation bump) transparently yields a
+    fresh plan — whose *value* is the jit key, so an unchanged decision
+    does not retrace.
+    """
+    from repro.kernels import autotune
+
+    return _plan_layer_cached(
+        b, n_in, n_k, cin, cout, padding, dtype, method, train,
+        autotune.generation(),
+    )
+
+
+def compile_plan(cfg, batch: int, dtype="float32", *, train: bool = False,
+                 method: str = "auto") -> TconvPlan:
+    """Compile a whole-generator :class:`TconvPlan` from the autotune cache.
+
+    ``cfg`` is a GAN config (anything with ``layers`` as ``(input_hw, cin,
+    cout)`` triples plus ``kernel``/``padding``/``name``). Call it once,
+    after tuning and before tracing; thread the result through
+    ``generator_apply(plan=...)`` / the train step. Retuning requires an
+    explicit recompile — compiled plans are immutable by design.
+    """
+    import jax.numpy as jnp
+
+    dt = str(jnp.dtype(dtype))
+    layers = tuple(
+        plan_layer(batch, hw, cfg.kernel, cin, cout, cfg.padding, dt,
+                   method=method, train=train)
+        for hw, cin, cout in cfg.layers
+    )
+    return TconvPlan(name=getattr(cfg, "name", "tconv"), layers=layers)
+
+
+def execute_layer(lp: LayerPlan, x, kernel, *, precision=None):
+    """Run one resolved layer. Runs at TRACE time only (the plan is a static
+    jit key); no cache consult or backward re-resolution happens here."""
+    if (x.shape[1], kernel.shape[0], kernel.shape[2], kernel.shape[3]) != (
+        lp.n_in, lp.n_k, lp.cin, lp.cout
+    ) or str(x.dtype) != lp.dtype:
+        raise ValueError(
+            f"LayerPlan mismatch: plan is for {lp.describe()!r}, got input "
+            f"{x.shape}/{x.dtype} kernel {kernel.shape}"
+        )
+    if lp.method == "pallas_phase":
+        from repro.kernels import ops
+
+        return ops.transpose_conv2d_pallas_phase(x, kernel, lp.padding, lp)
+    if lp.method in ("pallas", "pallas_fused"):
+        from repro.kernels import ops
+
+        return ops.transpose_conv2d_pallas(
+            x, kernel, lp.padding, lp.tile_h, lp.tile_w, lp
+        )
+    from repro.core import transpose_conv as tc
+
+    fn = tc.METHODS.get(lp.method)
+    if fn is None or fn is tc.transpose_conv_auto:
+        raise ValueError(f"LayerPlan resolved to unknown method {lp.method!r}")
+    return fn(x, kernel, lp.padding, precision=precision)

@@ -9,7 +9,7 @@ benchmarks (4x4 kernels, stride 2), with the compute method selectable:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -54,7 +54,21 @@ EBGAN = GANConfig(
 GAN_ZOO = {g.name: g for g in (DCGAN, ARTGAN, GPGAN, EBGAN)}
 
 
+def generator_plan(cfg: GANConfig, batch: int, *, dtype=jnp.float32,
+                   train: bool = False, method: str = "auto"):
+    """Compile the whole generator's :class:`~repro.kernels.plan.TconvPlan`
+    once (autotune-cache winners + cold-cache napkin rule). Thread the
+    result through ``generator_apply(plan=...)`` / the train step; retuning
+    requires an explicit recompile."""
+    from repro.kernels.plan import compile_plan
+
+    return compile_plan(cfg, batch, dtype, train=train, method=method)
+
+
 def generator_init(key, cfg: GANConfig):
+    """Generator parameters. Pair with :func:`generator_plan` to compile the
+    execution plan up front (the compile-once idiom the training examples
+    use: init params, compile the plan, thread it through apply/step)."""
     h0, c0, _ = cfg.layers[0]
     ks = jax.random.split(key, len(cfg.layers) + 1)
     params = {
@@ -68,10 +82,15 @@ def generator_init(key, cfg: GANConfig):
 
 
 def generator_apply(params, cfg: GANConfig, z, *, method: str = "auto",
-                    train: bool = False):
+                    train: bool = False, plan=None):
     """z: (B, z_dim) -> image (B, H, W, C_last) in [-1, 1].
 
-    method="auto" (default) dispatches each layer through the autotuner
+    ``plan=`` (a compiled :class:`~repro.kernels.plan.TconvPlan` from
+    :func:`generator_plan`) is the compile-once path: every layer runs
+    exactly what the plan resolved, with zero per-call dispatch work and
+    the plan value as the jit key — each distinct layer shape traces once
+    across repeated calls. Without a plan, method="auto" (default)
+    resolves a memoized single-layer plan per call through the autotuner
     cache (repro.kernels.autotune) with the napkin rule as cold-cache
     fallback; explicit methods pin every layer. ``train=True`` switches
     the auto dispatch to the jointly-tuned full-train-step winners (and
@@ -79,13 +98,18 @@ def generator_apply(params, cfg: GANConfig, z, *, method: str = "auto",
     training examples and Table-4 train benchmarks pass when the
     generator sits under ``jax.grad``.
     """
+    if plan is not None and len(plan) != len(cfg.layers):
+        raise ValueError(
+            f"plan has {len(plan)} layers, generator has {len(cfg.layers)}"
+        )
     h0, c0, _ = cfg.layers[0]
     x = (z @ params["proj"]["w"]).reshape(z.shape[0], h0, h0, c0)
     x = jax.nn.relu(x)
     n = len(cfg.layers)
     for i in range(n):
         x = tconv_apply(
-            params[f"tconv{i}"], x, cfg.padding, method=method, train=train
+            params[f"tconv{i}"], x, cfg.padding, method=method, train=train,
+            plan=plan[i] if plan is not None else None,
         )
         x = jnp.tanh(x) if i == n - 1 else jax.nn.relu(x)
     return x

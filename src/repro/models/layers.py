@@ -10,8 +10,6 @@ dry-run.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import NamedTuple
 
 import jax
@@ -158,7 +156,7 @@ def _chunked_attention(q, k, v, *, causal, q_positions, chunk):
         qc, qp = qi  # (B,cq,H,hd), (cq,)
 
         def kv_step(carry, ki):
-            m, l, acc = carry
+            m, lsum, acc = carry
             kc, vc, kj = ki
             s = jnp.einsum("bqhd,bthd->bhqt", qc, kc).astype(jnp.float32)
             s = constrain(s * scale, BATCH, MODEL, None, None)
@@ -168,21 +166,21 @@ def _chunked_attention(q, k, v, *, causal, q_positions, chunk):
             m_new = jnp.maximum(m, s.max(-1))
             corr = jnp.exp(m - m_new)
             p = jnp.exp(s - m_new[..., None])
-            l = l * corr + p.sum(-1)
+            lsum = lsum * corr + p.sum(-1)
             acc = acc * corr[..., None] + jnp.einsum(
                 "bhqt,bthd->bhqd", p, vc.astype(jnp.float32)
             )
-            return (m_new, l, acc), None
+            return (m_new, lsum, acc), None
 
         init = (
             jnp.full((B, H, cq), NEG_INF, jnp.float32),
             jnp.zeros((B, H, cq), jnp.float32),
             jnp.zeros((B, H, cq, hd), jnp.float32),
         )
-        (m, l, acc), _ = lax.scan(
+        (m, lsum, acc), _ = lax.scan(
             kv_step, init, (k_, v_, jnp.arange(nk))
         )
-        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        o = acc / jnp.maximum(lsum, 1e-30)[..., None]
         return None, o.transpose(0, 2, 1, 3)  # (B,cq,H,hd)
 
     _, o = lax.scan(q_step, None, (q_, qpos))
@@ -300,22 +298,26 @@ def tconv_init(key, n, cin, cout, *, dtype=jnp.float32):
 
 
 def tconv_apply(p, x, padding: int, *, method: str = "auto",
-                train: bool = False):
+                train: bool = False, plan=None):
     """Stride-2 transpose convolution through the dispatch layer.
 
-    method="auto" consults the persistent autotuner cache per layer shape
-    (repro.kernels.autotune) — GAN training and the Table-4 benchmarks run
-    on whatever operator measured fastest on this backend, including the
-    fused Pallas kernel (whose custom VJP dispatches the backward between
-    the segregated Pallas dx/dw kernels and the lax VJP). ``train=True``
-    selects by the jointly-tuned full-train-step winner instead of the
-    forward-only winner — pass it wherever the layer sits under
-    ``jax.grad`` (tune with ``python -m repro.kernels.autotune --train``).
+    ``plan=`` (a compiled :class:`repro.kernels.plan.LayerPlan`) is the
+    compile-once path: the layer runs exactly what the plan resolved — no
+    autotune-cache consult per call, and jit keys on the plan value.
+    Without a plan, method="auto" builds (and memoizes per cache
+    generation) a single-layer plan from the persistent autotuner cache —
+    GAN training and the Table-4 benchmarks run on whatever operator
+    measured fastest on this backend, including the fused Pallas kernel
+    (whose custom VJP dispatches the backward between the segregated
+    Pallas dx/dw kernels and the lax VJP). ``train=True`` selects by the
+    jointly-tuned full-train-step winner instead of the forward-only
+    winner — pass it wherever the layer sits under ``jax.grad`` (tune with
+    ``python -m repro.kernels.autotune --train``).
     """
     from repro.core import transpose_conv2d
 
     return transpose_conv2d(
-        x, p["w"], padding, method=method, train=train
+        x, p["w"], padding, method=method, train=train, plan=plan
     ) + p["b"]
 
 
@@ -430,11 +432,7 @@ def _moe_shard_map(p, cfg, x):
     reduction on dbrx-132b train_4k)."""
     from jax.sharding import PartitionSpec as P
 
-    try:  # moved to jax.shard_map after 0.4.x
-        from jax import shard_map
-    except ImportError:
-        from jax.experimental.shard_map import shard_map
-
+    shard_map, no_rep_check = sharding._shard_map_fn()
     mesh = sharding.get_abstract_mesh()
     axes = tuple(mesh.axis_names)
     dp = tuple(a for a in ("pod", "data") if a in axes)
@@ -468,12 +466,6 @@ def _moe_shard_map(p, cfg, x):
         out = jax.lax.psum(out, "model")
         return out.reshape(xl.shape)
 
-    import inspect
-
-    params = inspect.signature(shard_map).parameters
-    no_rep_check = {
-        ("check_vma" if "check_vma" in params else "check_rep"): False
-    }
     out = shard_map(
         rank_fn,
         mesh=mesh,

@@ -80,7 +80,6 @@ def mamba(p, cfg, x, *, cache=None, want_cache=False):
     m = p["mamba"]
     B, S, d = x.shape
     di = m["conv_w"].shape[1]
-    ds = m["a_log"].shape[1]
     k_conv = m["conv_w"].shape[0]
     xz = x @ m["w_in"]
     xin, z = xz[..., :di], xz[..., di:]

@@ -49,12 +49,26 @@ def abstract_train_state(model, train_cfg: TrainConfig):
     )
 
 
-def make_train_step(model, train_cfg: TrainConfig):
+def make_train_step(model, train_cfg: TrainConfig, *, plan=None):
+    """Build the fused train step.
+
+    ``plan=`` threads a compiled execution plan (e.g. a jointly-tuned
+    :class:`repro.kernels.plan.TconvPlan` for a transpose-conv generator)
+    through the model's loss: the step is traced once against exactly the
+    operator stack the plan resolved, and per-call dispatch (autotune-cache
+    consults, backward re-resolution) never runs inside the step. Models
+    whose ``loss`` doesn't take a plan keep the legacy two-argument
+    signature.
+    """
     opt_cfg = train_cfg.optimizer
+    loss_fn = (
+        model.loss if plan is None
+        else lambda params, batch: model.loss(params, batch, plan=plan)
+    )
 
     def train_step(params, opt_state, batch):
         (loss, metrics), grads = jax.value_and_grad(
-            model.loss, has_aux=True
+            loss_fn, has_aux=True
         )(params, batch)
         if train_cfg.compress_grads:
             # quantize->dequantize around the DP reduction: XLA reduces the
@@ -84,9 +98,12 @@ def make_train_step(model, train_cfg: TrainConfig):
     return train_step
 
 
-def make_eval_step(model):
+def make_eval_step(model, *, plan=None):
     def eval_step(params, batch):
-        loss, metrics = model.loss(params, batch)
+        if plan is not None:
+            loss, metrics = model.loss(params, batch, plan=plan)
+        else:
+            loss, metrics = model.loss(params, batch)
         return {"loss": loss, **metrics}
 
     return eval_step

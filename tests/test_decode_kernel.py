@@ -1,5 +1,4 @@
 """Flash-decode Pallas kernel vs the grouped-decode jnp oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

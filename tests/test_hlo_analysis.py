@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 from jax import lax
-import pytest
 
 from repro.launch import hlo_analysis as H
 

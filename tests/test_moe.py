@@ -5,7 +5,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced
 from repro.distributed import sharding as sh
@@ -79,5 +78,5 @@ def test_dispatch_combine_identity_experts():
 
     g = jax.grad(lambda p: L.moe(p, cfg, x)[0].sum())(p)
     assert all(
-        jnp.all(jnp.isfinite(l)) for l in jax.tree_util.tree_leaves(g)
+        jnp.all(jnp.isfinite(leaf)) for leaf in jax.tree_util.tree_leaves(g)
     )

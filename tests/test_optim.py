@@ -1,7 +1,6 @@
 """Optimizer, schedule and gradient-compression tests."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm

@@ -1,6 +1,5 @@
 """Parallelism-mode switch (tp vs fsdp/ZeRO-3) and attribution tooling."""
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 import pytest
 

@@ -1,0 +1,446 @@
+"""Compile-once execution plans: resolution, numerical identity with the
+legacy auto path, trace-once behaviour, sharded execution, and the removal
+of per-call dispatch work (no cache consults on the hot path)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import transpose_conv as tc
+from repro.kernels import autotune, ops, ref
+from repro.kernels import plan as planlib
+from repro.models import gan
+
+
+@pytest.fixture(autouse=True)
+def tmp_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+    autotune.clear_cache(memory_only=True)
+    yield
+    autotune.clear_cache(memory_only=True)
+
+
+def _tiny(cfg, scale=16):
+    layers = tuple(
+        (hw, max(cin // scale, 2), max(cout // scale, 2))
+        for hw, cin, cout in cfg.layers
+    )
+    return dataclasses.replace(cfg, layers=layers)
+
+
+def _grads(loss_fn, params):
+    return jax.tree_util.tree_leaves(jax.grad(loss_fn)(params))
+
+
+# ------------------------------------------------------------ plan objects
+
+def test_layer_plan_is_hashable_and_static_jittable():
+    lp = planlib.plan_layer(1, 8, 4, 4, 4, 2)
+    assert hash(lp) == hash(planlib.plan_layer(1, 8, 4, 4, 4, 2))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        lp.method = "conventional"
+
+    # hashable -> closable over / static under jit without pytree issues
+    f_static = jax.jit(
+        lambda x, k: planlib.execute_layer(lp, x, k)
+    )
+    x = jnp.ones((1, 8, 8, 4), jnp.float32)
+    k = jnp.ones((4, 4, 4, 4), jnp.float32)
+    np.testing.assert_allclose(
+        f_static(x, k), ref.conventional_ref(x, k, 2), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_compile_plan_cold_follows_napkin_rule():
+    cfg = _tiny(gan.DCGAN)
+    plan = planlib.compile_plan(cfg, 2)
+    assert len(plan) == len(cfg.layers)
+    assert plan.name == "dcgan"
+    for lp, (hw, cin, cout) in zip(plan, cfg.layers):
+        assert (lp.n_in, lp.cin, lp.cout) == (hw, cin, cout)
+        assert lp.source == "cold"
+        m = 2 * hw - cfg.kernel + 2 * cfg.padding
+        want = "unified_reshape" if (m + 1) // 2 >= 8 else "conventional"
+        assert lp.method == want
+        assert lp.bwd_method == "lax"  # CPU cold default
+    assert "fwd=" in plan.describe() and "dcgan" in plan.describe()
+
+
+def test_compile_plan_picks_tuned_winners_and_tiles():
+    cfg = dataclasses.replace(gan.DCGAN, layers=((4, 2, 2), (8, 2, 2)))
+    autotune.record(
+        autotune.layer_key(1, 4, 4, 2, 2, 2),
+        {"fwd": {"method": "pallas_fused", "time_s": 1e-5, "source": "test",
+                 "tile_h": 2, "tile_w": 3},
+         "bwd": {"method": "pallas", "time_s": 1e-5, "source": "test",
+                 "tile_h": 4, "tile_w": 4},
+         "step": {"method": "unified_matmul", "time_s": 1e-5,
+                  "source": "test"}},
+    )
+    eval_plan = planlib.compile_plan(cfg, 1)
+    assert eval_plan[0].method == "pallas_fused"
+    assert (eval_plan[0].tile_h, eval_plan[0].tile_w) == (2, 3)
+    assert eval_plan[0].bwd_method == "pallas"
+    assert (eval_plan[0].bwd_tile_h, eval_plan[0].bwd_tile_w) == (4, 4)
+    assert eval_plan[0].source == "tuned"
+    assert eval_plan[1].source == "cold"
+    # training mode prefers the jointly-tuned step winner
+    train_plan = planlib.compile_plan(cfg, 1, train=True)
+    assert train_plan[0].method == "unified_matmul"
+    # lax winners never carry fused tiles
+    assert train_plan[0].tile_h is None
+
+
+def test_explicit_method_plan_pins_but_keeps_tuned_tiles():
+    autotune.record(
+        autotune.layer_key(1, 6, 4, 2, 3, 2),
+        {"fwd": {"method": "pallas_fused", "time_s": 1e-5, "source": "test",
+                 "tile_h": 2, "tile_w": 3}},
+    )
+    lp = planlib.plan_layer(1, 6, 4, 2, 3, 2, method="pallas")
+    assert lp.method == "pallas_fused"
+    assert (lp.tile_h, lp.tile_w) == (2, 3)
+    with pytest.raises(ValueError, match="unknown method"):
+        planlib.plan_layer(1, 6, 4, 2, 3, 2, method="nope")
+
+
+def test_unknown_cached_winner_falls_back_cold():
+    """A cache written by a newer tool may name a method this build doesn't
+    have — the plan must fall back to the napkin rule, not explode."""
+    autotune.record(
+        autotune.layer_key(1, 8, 4, 4, 4, 2),
+        {"method": "hyper_fused_9000", "time_s": 1e-9, "source": "future"},
+    )
+    lp = planlib.plan_layer(1, 8, 4, 4, 4, 2)
+    assert lp.source == "cold" and lp.method == "unified_reshape"
+
+
+def test_execute_layer_rejects_mismatched_input():
+    lp = planlib.plan_layer(1, 8, 4, 4, 4, 2)
+    x = jnp.ones((1, 6, 6, 4), jnp.float32)  # wrong spatial extent
+    k = jnp.ones((4, 4, 4, 4), jnp.float32)
+    with pytest.raises(ValueError, match="LayerPlan mismatch"):
+        planlib.execute_layer(lp, x, k)
+    # batch is deliberately NOT checked: sharded execution runs the plan on
+    # per-shard batches
+    x8 = jnp.ones((3, 8, 8, 4), jnp.float32)
+    assert planlib.execute_layer(lp, x8, k).shape[0] == 3
+
+
+def test_transpose_conv2d_rejects_plan_padding_mismatch():
+    lp = planlib.plan_layer(1, 8, 4, 4, 4, 2)
+    x = jnp.ones((1, 8, 8, 4), jnp.float32)
+    k = jnp.ones((4, 4, 4, 4), jnp.float32)
+    with pytest.raises(ValueError, match="padding"):
+        tc.transpose_conv2d(x, k, 1, plan=lp)
+
+
+def test_generator_apply_rejects_wrong_length_plan():
+    cfg = _tiny(gan.DCGAN, scale=64)
+    params = gan.generator_init(jax.random.key(0), cfg)
+    z = jnp.ones((1, cfg.z_dim), jnp.float32)
+    short = planlib.TconvPlan("dcgan", planlib.compile_plan(cfg, 1).layers[:2])
+    with pytest.raises(ValueError, match="layers"):
+        gan.generator_apply(params, cfg, z, plan=short)
+
+
+def test_generator_plan_compiles_and_applies():
+    cfg = _tiny(gan.DCGAN, scale=64)
+    params = gan.generator_init(jax.random.key(0), cfg)
+    plan = gan.generator_plan(cfg, 2, train=True)
+    assert isinstance(plan, planlib.TconvPlan)
+    assert len(plan) == len(cfg.layers) and plan[0].batch == 2
+    z = jax.random.normal(jax.random.key(1), (2, cfg.z_dim))
+    img = gan.generator_apply(params, cfg, z, plan=plan)
+    assert img.shape[0] == 2 and bool(jnp.all(jnp.isfinite(img)))
+
+
+# ------------------------------------------- numerical identity (zoo-wide)
+
+@pytest.mark.parametrize("name", list(gan.GAN_ZOO))
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_plan_matches_legacy_auto_fwd_and_grads(name, dtype):
+    """A compiled TconvPlan generator must be numerically identical to the
+    legacy per-call auto path — forward and parameter gradients — across
+    the whole GAN zoo, fp32 and bf16."""
+    cfg = _tiny(gan.GAN_ZOO[name], scale=32)
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    params = jax.tree_util.tree_map(
+        lambda a: a.astype(dt), gan.generator_init(jax.random.key(0), cfg)
+    )
+    z = jax.random.normal(jax.random.key(1), (2, cfg.z_dim)).astype(dt)
+    plan = planlib.compile_plan(cfg, 2, dtype=dt, train=True)
+
+    got = gan.generator_apply(params, cfg, z, plan=plan)
+    want = gan.generator_apply(params, cfg, z, method="auto", train=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    g_plan = _grads(
+        lambda p: gan.generator_apply(p, cfg, z, plan=plan).sum(), params
+    )
+    g_auto = _grads(
+        lambda p: gan.generator_apply(
+            p, cfg, z, method="auto", train=True
+        ).sum(),
+        params,
+    )
+    for a, b in zip(g_plan, g_auto):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_plan_with_tuned_pallas_layers_matches_reference():
+    """Plans that resolve to the Pallas kernels (tuned entries) must still
+    produce the reference numerics, fwd + grads via the plan-resolved
+    backward."""
+    cfg = dataclasses.replace(gan.DCGAN, layers=((4, 4, 4), (8, 4, 2)))
+    for hw, cin, cout in cfg.layers:
+        autotune.record(
+            autotune.layer_key(2, hw, cfg.kernel, cin, cout, cfg.padding),
+            {"fwd": {"method": "pallas_fused", "time_s": 0.0,
+                     "source": "test", "tile_h": 2, "tile_w": 4},
+             "bwd": {"method": "pallas", "time_s": 0.0, "source": "test"}},
+        )
+    params = gan.generator_init(jax.random.key(0), cfg)
+    z = jax.random.normal(jax.random.key(1), (2, cfg.z_dim))
+    plan = planlib.compile_plan(cfg, 2)
+    assert all(lp.method == "pallas_fused" for lp in plan)
+    assert all(lp.bwd_method == "pallas" for lp in plan)
+    got = gan.generator_apply(params, cfg, z, plan=plan)
+    want = gan.generator_apply(params, cfg, z, method="unified")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    g_plan = _grads(
+        lambda p: jnp.mean(gan.generator_apply(p, cfg, z, plan=plan) ** 2),
+        params,
+    )
+    g_ref = _grads(
+        lambda p: jnp.mean(
+            gan.generator_apply(p, cfg, z, method="unified") ** 2
+        ),
+        params,
+    )
+    for a, b in zip(g_plan, g_ref):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------- trace counting
+
+def test_plan_generator_traces_each_layer_once(tconv_trace_counter):
+    """The 4-layer DCGAN generator under a compiled plan traces each
+    distinct layer shape exactly once across repeated calls — eval (eager
+    + jitted) and train (value_and_grad steps) included."""
+    cfg = _tiny(gan.DCGAN)
+    assert len(cfg.layers) == 4
+    params = gan.generator_init(jax.random.key(0), cfg)
+    z = jax.random.normal(jax.random.key(1), (2, cfg.z_dim))
+    eval_plan = planlib.compile_plan(cfg, 2)
+
+    for _ in range(3):  # repeated eager eval calls: jit-cache hits
+        gan.generator_apply(params, cfg, z, plan=eval_plan)
+    jit_apply = jax.jit(
+        lambda p, z: gan.generator_apply(p, cfg, z, plan=eval_plan)
+    )
+    for _ in range(3):  # outer-jit eval: the inner trace is reused
+        jit_apply(params, z)
+    assert len(tconv_trace_counter) == 4
+    assert all(c == 1 for c in tconv_trace_counter.values()), (
+        tconv_trace_counter
+    )
+
+    # train: the jointly-tuned plan under repeated value_and_grad steps.
+    # (cold cache: the train plan VALUE equals the eval plan, so the eval
+    # traces are reused — record a diverging step winner for layer 0 to
+    # force one genuinely new layer plan)
+    hw, cin, cout = cfg.layers[0]
+    autotune.record(
+        autotune.layer_key(2, hw, cfg.kernel, cin, cout, cfg.padding),
+        {"step": {"method": "unified_matmul", "time_s": 0.0,
+                  "source": "test"}},
+    )
+    train_plan = planlib.compile_plan(cfg, 2, train=True)
+    assert train_plan[0] != eval_plan[0]
+    assert train_plan.layers[1:] == eval_plan.layers[1:]
+
+    step = jax.jit(
+        jax.value_and_grad(
+            lambda p, z: jnp.mean(
+                gan.generator_apply(p, cfg, z, plan=train_plan) ** 2
+            )
+        )
+    )
+    for _ in range(3):
+        step(params, z)
+    # 4 eval layer plans + 1 diverging train layer plan, each traced once
+    assert len(tconv_trace_counter) == 5
+    assert all(c == 1 for c in tconv_trace_counter.values()), (
+        tconv_trace_counter
+    )
+
+
+# ------------------------------------------------- dispatch-overhead seams
+
+def test_plan_resolved_backward_skips_cache_consult(monkeypatch):
+    """Plan-executed Pallas layers must never hit _resolve_bwd — the plan
+    already carries the backward method + tiles."""
+    calls = []
+    monkeypatch.setattr(
+        ops, "_resolve_bwd",
+        lambda *a, **kw: calls.append(a) or ("lax", None, None),
+    )
+    lp = planlib.plan_layer(1, 6, 4, 2, 2, 2, method="pallas")
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 6, 6, 2)),
+                    jnp.float32)
+    k = jnp.asarray(np.random.default_rng(1).normal(size=(4, 4, 2, 2)),
+                    jnp.float32)
+    jax.grad(lambda x: planlib.execute_layer(lp, x, k).sum())(x)
+    assert not calls, "plan-resolved backward must skip _resolve_bwd"
+    # the legacy string selector still consults (memoized)
+    jax.grad(
+        lambda x: ops.transpose_conv2d_pallas(x, k, 2, None, None,
+                                              "auto").sum()
+    )(x)
+    assert calls
+
+
+def test_legacy_resolve_bwd_memoizes_per_shape_and_epoch(monkeypatch):
+    """The legacy bwd='auto' path must query the autotune cache at most once
+    per (layer signature, cache generation) — not on every backward call."""
+    ops._resolve_bwd_cached.cache_clear()
+    consults = []
+    orig = autotune.best_bwd
+
+    def spy(*a, **kw):
+        consults.append(a)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(autotune, "best_bwd", spy)
+    x = jnp.ones((1, 6, 6, 2), jnp.float32)
+    k = jnp.ones((4, 4, 2, 2), jnp.float32)
+    for _ in range(3):
+        ops._resolve_bwd(x, k, 2)
+    assert len(consults) == 1
+    # a cache mutation bumps the generation: exactly one fresh consult
+    autotune.record(
+        autotune.layer_key(1, 6, 4, 2, 2, 2),
+        {"method": "lax", "time_s": 0.0, "source": "test"},
+        direction="bwd",
+    )
+    for _ in range(3):
+        ops._resolve_bwd(x, k, 2)
+    assert len(consults) == 2
+    assert ops._resolve_bwd(x, k, 2) == ("lax", None, None)
+
+
+def test_plan_layer_cached_memoizes_and_invalidates_on_retune(monkeypatch):
+    consults = []
+    orig = autotune.best_entry
+
+    def spy(*a, **kw):
+        consults.append(a)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(autotune, "best_entry", spy)
+    a = planlib.plan_layer_cached(1, 6, 4, 2, 3, 2)
+    b = planlib.plan_layer_cached(1, 6, 4, 2, 3, 2)
+    assert a is b and len(consults) == 1
+    autotune.record(
+        autotune.layer_key(1, 6, 4, 2, 3, 2),
+        {"method": "unified_matmul", "time_s": 0.0, "source": "test"},
+    )
+    c = planlib.plan_layer_cached(1, 6, 4, 2, 3, 2)
+    assert len(consults) == 2
+    assert c.method == "unified_matmul" and c.source == "tuned"
+
+
+# ------------------------------------------------------ sharded execution
+
+def test_shard_plan_apply_matches_unsharded():
+    from repro.distributed import sharding
+
+    cfg = _tiny(gan.DCGAN, scale=64)
+    params = gan.generator_init(jax.random.key(0), cfg)
+    z = jax.random.normal(jax.random.key(1), (2, cfg.z_dim))
+    plan = planlib.compile_plan(cfg, 2)
+
+    def apply_fn(p, z, plan):
+        return gan.generator_apply(p, cfg, z, plan=plan)
+
+    want = apply_fn(params, z, plan)
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()).reshape(-1), ("data",)
+    )
+    got = sharding.shard_plan_apply(apply_fn, params, z, plan, mesh=mesh)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_shard_plan_apply_falls_back_without_mesh():
+    from repro.distributed import sharding
+
+    cfg = _tiny(gan.DCGAN, scale=64)
+    params = gan.generator_init(jax.random.key(0), cfg)
+    z = jax.random.normal(jax.random.key(1), (2, cfg.z_dim))
+    plan = planlib.compile_plan(cfg, 2)
+
+    def apply_fn(p, z, plan):
+        return gan.generator_apply(p, cfg, z, plan=plan)
+
+    got = sharding.shard_plan_apply(apply_fn, params, z, plan, mesh=None)
+    want = apply_fn(params, z, plan)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_shard_plan_apply_traces_once(tconv_trace_counter):
+    """Plans are static under shard_map: the sharded generator traces each
+    layer exactly once even across repeated sharded calls."""
+    from repro.distributed import sharding
+
+    cfg = _tiny(gan.DCGAN, scale=64)
+    params = gan.generator_init(jax.random.key(0), cfg)
+    z = jax.random.normal(jax.random.key(1), (2, cfg.z_dim))
+    plan = planlib.compile_plan(cfg, 2)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(-1), ("data",))
+
+    def apply_fn(p, z, plan):
+        return gan.generator_apply(p, cfg, z, plan=plan)
+
+    fn = jax.jit(
+        lambda p, z: sharding.shard_plan_apply(
+            apply_fn, p, z, plan, mesh=mesh
+        )
+    )
+    for _ in range(3):
+        fn(params, z)
+    assert tconv_trace_counter and all(
+        c == 1 for c in tconv_trace_counter.values()
+    ), tconv_trace_counter
+
+
+# ----------------------------------------------------- train-step threading
+
+def test_make_train_step_threads_plan():
+    from repro.train.train_step import TrainConfig, make_train_step
+
+    cfg = _tiny(gan.DCGAN, scale=64)
+    plan = planlib.compile_plan(cfg, 2, train=True)
+    seen = []
+
+    class TinyGanModel:
+        def loss(self, params, batch, *, plan=None):
+            seen.append(plan)
+            img = gan.generator_apply(params, cfg, batch, plan=plan)
+            return jnp.mean(img ** 2), {}
+
+    model = TinyGanModel()
+    params = gan.generator_init(jax.random.key(0), cfg)
+    from repro.optim import adamw_init
+
+    tc_cfg = TrainConfig()
+    opt_state = adamw_init(params, tc_cfg.optimizer)
+    step = make_train_step(model, tc_cfg, plan=plan)
+    z = jax.random.normal(jax.random.key(1), (2, cfg.z_dim))
+    params2, opt_state2, metrics = step(params, opt_state, z)
+    assert seen and all(p is plan for p in seen)
+    assert jnp.isfinite(metrics["loss"])

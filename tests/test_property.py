@@ -3,7 +3,6 @@
 hypothesis is an optional dev dependency (requirements-dev.txt); the module
 skips cleanly where it's absent so bare environments still collect the suite.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

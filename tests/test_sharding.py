@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-import pytest
 
 from repro.configs import get_config
 from repro.distributed import sharding as sh

@@ -2,9 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import transpose_conv2d
 from repro.models import gan
 
 
