@@ -21,8 +21,12 @@ def main():
     print("# GAN generators — full-stack MACs (Table 4 models)")
     print("model,conv_MACs,seg_MACs,reduction,mem_savings_bytes")
     for name, cfg in GAN_ZOO.items():
-        c = generator_flops(cfg, method="conventional")
-        s = generator_flops(cfg, method="segregated")
+        # bare transpose-conv MACs: the paper's exact-4x algebra (the
+        # default additionally counts the epilogue's element ops)
+        c = generator_flops(cfg, method="conventional",
+                            include_epilogue=False)
+        s = generator_flops(cfg, method="segregated",
+                            include_epilogue=False)
         mem = sum(memory_savings_bytes(hw, cin, 4, cfg.padding)
                   for hw, cin, _ in cfg.layers)
         print(f"{name},{c},{s},{c / s:.3f},{mem}")

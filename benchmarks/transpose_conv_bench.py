@@ -25,6 +25,13 @@ compare against. Per layer it records:
   they compare the analytic roofline models, so there the gates guard the
   models' tiling/geometry assumptions rather than kernel wall time.
 
+An ``epilogue_fusion`` section records, per Table-4 generator layer, the
+cost of the whole ``act(tconv + b)`` layer with the epilogue **fused into
+the Pallas kernel** vs the **unfused kernel + post-ops** spelling (wall
+clock on TPU; the roofline models — whose unfused side pays the extra
+output-map round trip — on CPU). ``--check`` gates fused <= 1.05x unfused
+on every layer.
+
 Additionally a ``plan_dispatch`` section records **plan-vs-legacy dispatch
 overhead** on a reduced DCGAN generator: wall time of N repeated generator
 calls through a pre-compiled :class:`repro.kernels.plan.TconvPlan` versus
@@ -99,7 +106,7 @@ def bench_layer(hw, cin, cout, kernel, padding, methods, *, repeats, warmup):
     g = jax.random.normal(jax.random.key(hw + 2), (1, m_out, m_out, cout))
     bwd_wall = {
         "lax": time_fn(
-            lambda x, k, g: ops._lax_bwd(padding, (x, k), g),
+            lambda x, k, g: ops._lax_bwd(padding, (x, k, None, None), g),
             x, k, g, repeats=repeats, warmup=warmup,
         )
     }
@@ -167,6 +174,81 @@ def bench_layer(hw, cin, cout, kernel, padding, methods, *, repeats, warmup):
         "bwd_pallas_vs_lax": bwd_pallas_vs_lax,
         "step_wall_s": step_wall,
     }
+
+
+# the fused epilogue must never cost more than noise over the unfused
+# kernel-plus-post-ops spelling (it strictly removes output-map traffic)
+EPILOGUE_FUSION_TOLERANCE = 1.05
+
+
+def bench_epilogue_fusion(models, *, repeats, warmup) -> dict:
+    """Fused-epilogue vs post-op walls per zoo layer.
+
+    Each Table-4 generator layer runs as the full ``act(tconv + b)`` unit
+    (its real epilogue: relu mid-stack, tanh on the output layer) two ways:
+    the epilogue fused into the Pallas kernel's accumulator store vs the
+    bare kernel followed by composed post-ops. On TPU both are wall-clocked;
+    on CPU (where Pallas only interprets) the comparison is the roofline
+    model — the fused side omits :func:`repro.kernels.autotune
+    .epilogue_postop_bytes` of output-map round trips, so the gate guards
+    the model's geometry, not kernel wall clock. ``--check`` gates
+    fused <= EPILOGUE_FUSION_TOLERANCE x unfused on every layer.
+    """
+    from repro.kernels import autotune
+    from repro.kernels.epilogue import Epilogue
+    from repro.kernels.transpose_conv2d import transpose_conv2d_pallas
+    from repro.models.gan import GAN_ZOO, generator_act
+
+    on_tpu = jax.default_backend() == "tpu"
+    rows = []
+    for name in models:
+        cfg = GAN_ZOO[name]
+        for i, (hw, cin, cout) in enumerate(cfg.layers):
+            epi = Epilogue(bias=True, act=generator_act(cfg, i))
+            _, (tile_h, tile_w) = autotune.best_fused_proxy(
+                1, hw, cfg.kernel, cin, cout, cfg.padding
+            )
+            if on_tpu:
+                x = jax.random.normal(jax.random.key(i), (1, hw, hw, cin))
+                k = jax.random.normal(
+                    jax.random.key(i + 1), (cfg.kernel,) * 2 + (cin, cout)
+                ) * 0.05
+                b = jax.random.normal(jax.random.key(i + 2), (cout,))
+                fused_s = time_fn(
+                    jax.jit(lambda x, k, b: transpose_conv2d_pallas(
+                        x, k, cfg.padding, tile_h=tile_h, tile_w=tile_w,
+                        epilogue=epi, bias=b,
+                    )), x, k, b, repeats=repeats, warmup=warmup,
+                )
+                unfused_s = time_fn(
+                    jax.jit(lambda x, k, b: epi.apply(
+                        transpose_conv2d_pallas(
+                            x, k, cfg.padding, tile_h=tile_h, tile_w=tile_w
+                        ), b,
+                    )), x, k, b, repeats=repeats, warmup=warmup,
+                )
+                source = "wall"
+            else:
+                fused_s = autotune.roofline_proxy(
+                    "pallas_fused", 1, hw, cfg.kernel, cin, cout,
+                    cfg.padding, tile_h=tile_h, tile_w=tile_w, epilogue=epi,
+                )
+                unfused_s = autotune.roofline_proxy(
+                    "pallas_fused", 1, hw, cfg.kernel, cin, cout,
+                    cfg.padding, tile_h=tile_h, tile_w=tile_w, epilogue=epi,
+                    fuse_epilogue=False,
+                )
+                source = "proxy"
+            rows.append({
+                "model": name,
+                "layer": f"{hw}x{hw}x{cin}",
+                "epilogue": epi.tag(),
+                "source": source,
+                "fused_s": fused_s,
+                "unfused_s": unfused_s,
+                "fused_vs_unfused": unfused_s / fused_s,
+            })
+    return {"tolerance": EPILOGUE_FUSION_TOLERANCE, "layers": rows}
 
 
 # plan dispatch may not beat legacy by more than measurement noise on a
@@ -276,6 +358,9 @@ def run(quick: bool = False) -> dict:
             "layers": rows, "totals": totals,
             "bwd_totals": bwd_totals, "step_totals": step_totals,
         }
+    out["epilogue_fusion"] = bench_epilogue_fusion(
+        models, repeats=repeats, warmup=warmup
+    )
     out["plan_dispatch"] = bench_plan_dispatch(
         calls=10 if quick else 30, repeats=2 if quick else 3
     )
@@ -285,8 +370,10 @@ def run(quick: bool = False) -> dict:
 def check(result: dict) -> list[str]:
     """The acceptance gates: on every Table-4 layer the fused forward must
     beat the per-phase grid AND the segregated Pallas backward must beat
-    the lax VJP; and the compiled-plan dispatch path must be no slower
-    than legacy auto dispatch (within noise tolerance)."""
+    the lax VJP; the fused epilogue must cost at most
+    EPILOGUE_FUSION_TOLERANCE x the unfused kernel-plus-post-ops spelling;
+    and the compiled-plan dispatch path must be no slower than legacy auto
+    dispatch (within noise tolerance)."""
     bad = []
     for name, model in result["models"].items():
         for row in model["layers"]:
@@ -300,6 +387,14 @@ def check(result: dict) -> list[str]:
                     f"{name}/{row['layer']}: bwd_pallas_vs_lax="
                     f"{row['bwd_pallas_vs_lax']:.3f}"
                 )
+    for row in result.get("epilogue_fusion", {}).get("layers", []):
+        if row["fused_s"] > row["unfused_s"] * EPILOGUE_FUSION_TOLERANCE:
+            bad.append(
+                f"{row['model']}/{row['layer']}[{row['epilogue']}]: "
+                f"fused_s={row['fused_s']:.3g} > "
+                f"{EPILOGUE_FUSION_TOLERANCE}x unfused_s="
+                f"{row['unfused_s']:.3g}"
+            )
     # only the EAGER mode is gated: that's where the plan path removes real
     # per-call dispatch work. In jit mode both sides run byte-identical
     # compiled computations, so any delta is timing noise — recorded in the
@@ -345,6 +440,12 @@ def main(argv=None):
                   f"{row['step_wall_s']['auto']:.5f},"
                   f"{best},{row['fused_vs_phase']:.3f},"
                   f"{row['bwd_pallas_vs_lax']:.3f}")
+    ef = result.get("epilogue_fusion", {}).get("layers", [])
+    if ef:
+        worst = min(ef, key=lambda r: r["fused_vs_unfused"])
+        print(f"epilogue_fusion: {len(ef)} layers ({ef[0]['source']}), "
+              f"worst fused_vs_unfused x{worst['fused_vs_unfused']:.3f} "
+              f"({worst['model']}/{worst['layer']}[{worst['epilogue']}])")
     pd = result.get("plan_dispatch", {})
     for mode in ("eager", "jit"):
         if mode in pd:
@@ -357,8 +458,9 @@ def main(argv=None):
         if args.check:
             raise SystemExit(1)
     elif args.check:
-        print("# check ok: fused >= per-phase, pallas bwd >= lax bwd on "
-              "every layer, and plan dispatch <= legacy auto dispatch")
+        print("# check ok: fused >= per-phase, pallas bwd >= lax bwd, "
+              "fused epilogue <= 1.05x unfused on every layer, and plan "
+              "dispatch <= legacy auto dispatch")
 
 
 if __name__ == "__main__":

@@ -57,15 +57,18 @@ def main():
 
     if args.tune:
         # tune BEFORE the jitted step is traced: the outer jit pins whatever
-        # the cache says at trace time (docs/AUTOTUNE.md)
+        # the cache says at trace time (docs/AUTOTUNE.md). Each layer tunes
+        # as the full act(tconv + b) unit — the same epilogue'd signature
+        # generator_plan compiles below.
         from repro.kernels import autotune
 
-        for hw, cin, cout in cfg.layers:
+        epis = gan.generator_epilogues(cfg)
+        for (hw, cin, cout), epi in zip(cfg.layers, epis):
             rec = autotune.tune_layer(
                 args.batch, hw, cfg.kernel, cin, cout, cfg.padding,
-                train=True,
+                train=True, epilogue=epi,
             )
-            print(f"[tune] {hw}x{hw}x{cin}->{cout}: "
+            print(f"[tune] {hw}x{hw}x{cin}->{cout} [{epi.tag()}]: "
                   f"fwd={rec['fwd']['method']} bwd={rec['bwd']['method']} "
                   f"step={rec['step']['method']}")
 

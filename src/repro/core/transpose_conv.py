@@ -196,7 +196,7 @@ def transpose_conv_unified_reshape(x, kernel, padding: int = 0, *,
 
 
 def transpose_conv_auto(x, kernel, padding: int = 0, *, precision=None,
-                        train: bool = False):
+                        train: bool = False, bias=None, act: str = "none"):
     """Measured per-layer method selection (HUGE²-style dispatch).
 
     Thin wrapper over the plan subsystem (:mod:`repro.kernels.plan`): it
@@ -214,13 +214,16 @@ def transpose_conv_auto(x, kernel, padding: int = 0, *, precision=None,
     layers at batch 1) the single big conventional GEMM is faster on CPU
     because XLA's skinny-M GEMM efficiency collapses.
     """
+    from repro.kernels import epilogue as epilib
     from repro.kernels import plan as planlib
 
     lp = planlib.plan_layer_cached(
         x.shape[0], x.shape[1], kernel.shape[0], kernel.shape[2],
         kernel.shape[3], padding, str(x.dtype), method="auto", train=train,
+        epilogue=epilib.make(bias, act),
     )
-    return planlib.execute_layer(lp, x, kernel, precision=precision)
+    return planlib.execute_layer(lp, x, kernel, bias=bias,
+                                 precision=precision)
 
 
 def transpose_conv_unified_matmul(x, kernel, padding: int = 0, *,
@@ -293,6 +296,8 @@ def transpose_conv2d(
     precision=None,
     train: bool = False,
     plan=None,
+    bias=None,
+    act: str = "none",
 ) -> jnp.ndarray:
     """Stride-2 transpose convolution, paper semantics. See module docstring.
 
@@ -307,7 +312,19 @@ def transpose_conv2d(
     ``generator_apply(plan=...)``. ``train=True`` makes ``auto`` prefer the
     jointly-tuned full-train-step winner (see :func:`transpose_conv_auto`);
     it is a no-op for explicit methods.
+
+    ``bias``/``act`` attach the layer's elementwise tail
+    (:mod:`repro.kernels.epilogue`): planned methods bake it into the
+    layer's :class:`~repro.kernels.plan.LayerPlan` (the Pallas kernels fuse
+    it onto the accumulator store; the backward flows through the fused
+    ``g·act'(y)`` prologue and the in-launch ``db`` reduction); explicit
+    lax methods compose the identical post-ops — every method stays
+    numerically interchangeable. A pre-compiled ``plan=`` must have been
+    compiled with the matching epilogue.
     """
+    from repro.kernels import epilogue as epilib
+
+    epi = epilib.make(bias, act)
     if plan is None and method in (
         "auto", "pallas", "pallas_fused", "pallas_phase"
     ):
@@ -316,36 +333,50 @@ def transpose_conv2d(
         plan = planlib.plan_layer_cached(
             x.shape[0], x.shape[1], kernel.shape[0], kernel.shape[2],
             kernel.shape[3], padding, str(x.dtype), method=method,
-            train=train,
+            train=train, epilogue=epi,
         )
-    if plan is not None and plan.padding != padding:
-        raise ValueError(
-            f"plan was compiled for padding={plan.padding}, got {padding}"
-        )
+    if plan is not None:
+        if plan.padding != padding:
+            raise ValueError(
+                f"plan was compiled for padding={plan.padding}, "
+                f"got {padding}"
+            )
+        if epilib.canonical(plan.epilogue) != epi:
+            raise ValueError(
+                f"plan was compiled for epilogue="
+                f"{plan.epilogue.tag() if plan.epilogue else None}, got "
+                f"{epi.tag() if epi else None} (recompile the plan with "
+                "the layer's bias/activation)"
+            )
     return _transpose_conv2d_jit(
-        x, kernel, padding, method=method, precision=precision, plan=plan
+        x, kernel, bias, padding, method=method, precision=precision,
+        plan=plan, act=act,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("padding", "method", "precision", "plan"),
+    static_argnames=("padding", "method", "precision", "plan", "act"),
 )
 def _transpose_conv2d_jit(
     x: jnp.ndarray,
     kernel: jnp.ndarray,
+    bias=None,
     padding: int = 0,
     *,
     method: str = "unified",
     precision=None,
     plan=None,
+    act: str = "none",
 ) -> jnp.ndarray:
     if plan is not None:
         # local import: keeps Pallas optional at import time, and the
         # module-attr lookup lets tests spy on execute_layer (trace counts)
         from repro.kernels import plan as planlib
 
-        return planlib.execute_layer(plan, x, kernel, precision=precision)
+        return planlib.execute_layer(
+            plan, x, kernel, bias=bias, precision=precision
+        )
     # plan-building in transpose_conv2d covers "auto" and the Pallas
     # spellings, so only the explicit lax methods reach this point
     try:
@@ -355,4 +386,8 @@ def _transpose_conv2d_jit(
             f"unknown method {method!r}; one of {sorted(METHODS)}, "
             "'pallas'/'pallas_fused', or 'pallas_phase'"
         )
-    return fn(x, kernel, padding, precision=precision)
+    y = fn(x, kernel, padding, precision=precision)
+    from repro.kernels import epilogue as epilib
+
+    epi = epilib.make(bias, act)
+    return epi.apply(y, bias) if epi is not None else y

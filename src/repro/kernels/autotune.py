@@ -7,8 +7,13 @@ HUGE² (arXiv:1907.11210) solves with *measured* per-layer operator selection:
 no napkin rule survives contact with real hardware, so the winner for a layer
 shape is decided by timing candidates on the machine at hand and remembered.
 
-Since cache schema **v2** the training step is the tuned unit: each layer
-record carries per-direction entries —
+Since cache schema **v2** the training step is the tuned unit; since
+schema **v3** the layer signature additionally carries the layer's fused
+bias+activation **epilogue** (:mod:`repro.kernels.epilogue` — key component
+``e:<tag>``), and for epilogue'd layers the races compare the
+fused-epilogue Pallas kernels against their unfused
+kernel-plus-post-ops variants in every direction. Each layer record
+carries per-direction entries —
 
 * ``fwd``   — the forward operator race (what v1 stored);
 * ``bwd``   — the backward race between the segregated Pallas backward
@@ -26,12 +31,15 @@ Components:
   spatial-tile variants for the Pallas kernels) and records the winner;
   ``train=True`` additionally tunes the ``bwd`` and ``step`` directions.
 * A persistent JSON cache keyed by ``(backend, batch, N, n, Cin, Cout, P,
-  dtype)``; location from ``$REPRO_AUTOTUNE_CACHE`` (default
+  dtype, epilogue)``; location from ``$REPRO_AUTOTUNE_CACHE`` (default
   ``~/.cache/repro/autotune.json``). Concurrent writers last-write-win on an
-  atomic rename; the in-memory view reloads on file mtime change. **v1
-  cache files migrate on load** (flat entries become the ``fwd`` direction;
-  ``bwd``/``step`` stay cold until retuned) and are rewritten as v2 on the
-  next save; unknown versions are ignored.
+  atomic rename; the in-memory view reloads on file mtime change. **v1 and
+  v2 cache files migrate on load** (v1 flat entries become the ``fwd``
+  direction; v2 keys gain the ``e:none`` epilogue component — tuned tiles
+  survive both hops) and are rewritten as v3 on the next save; unknown
+  versions are ignored (and set aside, never clobbered, on save).
+  ``--prune`` (or :func:`prune_cache`) drops entries whose key no longer
+  parses under the current schema instead of carrying them forever.
 * :func:`best_method` / :func:`best_bwd` / :func:`best_entry` — cache-only
   consults used at trace time by ``transpose_conv_auto`` (fwd/step) and the
   custom VJP in ``repro.kernels.ops`` (bwd). A miss falls back to the old
@@ -58,6 +66,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import tempfile
 from pathlib import Path
 from typing import Any
@@ -67,6 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import segregation as seg
+from repro.kernels import epilogue as epilib
 from repro.kernels.transpose_conv2d import default_tiles
 from repro.kernels.transpose_conv2d_bwd import (
     default_bwd_tiles,
@@ -79,8 +89,13 @@ from repro.timing import time_fn as _time_fn
 PEAK_FLOPS = 275e12
 PEAK_BW = 1.2e12
 
-_CACHE_VERSION = 2
+_CACHE_VERSION = 3
 _DIRECTIONS = ("fwd", "bwd", "step")
+# what a well-formed v3 key looks like; --prune drops everything else
+_KEY_RE = re.compile(
+    r"^[A-Za-z0-9_]+\|b\d+\|n\d+\|k\d+\|ci\d+\|co\d+\|p\d+"
+    r"\|[A-Za-z0-9_.]+\|e:[A-Za-z0-9.+_-]+$"
+)
 # in-memory cache state; "generation" bumps whenever entries change (record,
 # clear, reload-from-disk) so 'auto' dispatch can retrace (see generation())
 _STATE: dict[str, Any] = {
@@ -104,10 +119,14 @@ def cache_path() -> Path:
 def layer_key(
     b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int,
     dtype: str = "float32", backend: str | None = None,
+    epilogue=None,
 ) -> str:
     backend = backend or jax.default_backend()
+    epi = epilib.canonical(epilogue)
+    tag = "none" if epi is None else epi.tag()
     return (
         f"{backend}|b{b}|n{n_in}|k{n_k}|ci{cin}|co{cout}|p{padding}|{dtype}"
+        f"|e:{tag}"
     )
 
 
@@ -116,6 +135,12 @@ def _normalize(entry: dict) -> dict:
     if any(d in entry for d in _DIRECTIONS):
         return entry
     return {"fwd": entry}
+
+
+def _migrate_key(key: str) -> str:
+    """v1/v2 keys (no epilogue component) describe epilogue-less layers:
+    they become the ``e:none`` signature of the v3 schema."""
+    return key if "|e:" in key else key + "|e:none"
 
 
 def _load() -> dict:
@@ -140,12 +165,14 @@ def _load() -> dict:
                 blob = {}  # valid JSON but not a cache: treat as foreign
             if blob.get("version") == _CACHE_VERSION:
                 _STATE["entries"] = blob.get("entries", {})
-            elif blob.get("version") == 1:
-                # v1 (forward-only) caches migrate in place: flat entries
-                # become the fwd direction; bwd/step stay cold until retuned.
-                # The next _save() rewrites the file as v2.
+            elif blob.get("version") in (1, 2):
+                # older schemas migrate in place — none of the tuned data is
+                # lost: v1 flat entries become the fwd direction, and
+                # v1/v2 keys (which predate epilogue'd signatures) become
+                # the e:none signature of v3. The next _save() rewrites the
+                # file as v3.
                 _STATE["entries"] = {
-                    k: _normalize(dict(e))
+                    _migrate_key(k): _normalize(dict(e))
                     for k, e in blob.get("entries", {}).items()
                 }
             else:  # foreign version: don't pin stale entries as current
@@ -163,7 +190,7 @@ def _save() -> None:
     try:  # never clobber a newer tool's cache: set it aside, don't destroy
         prev = json.loads(path.read_text())
         ver = prev.get("version") if isinstance(prev, dict) else None
-        if ver is not None and ver not in (1, _CACHE_VERSION):
+        if ver is not None and ver not in (1, 2, _CACHE_VERSION):
             path.replace(path.with_name(path.name + f".v{ver}.bak"))
     except (json.JSONDecodeError, OSError):
         pass  # corrupt/missing cache: overwriting it loses nothing
@@ -222,6 +249,22 @@ def clear_cache(*, memory_only: bool = False) -> None:
             pass
 
 
+def prune_cache(*, persist: bool = True) -> list[str]:
+    """Drop entries whose layer signature no longer parses under the
+    current schema version (cache hygiene: migrations keep *valid* old
+    entries, but malformed or hand-edited keys would otherwise ride along
+    forever). Returns the dropped keys."""
+    entries = _load()
+    dropped = [k for k in entries if not _KEY_RE.match(k)]
+    if dropped:
+        for k in dropped:
+            del entries[k]
+        _STATE["generation"] += 1
+        if persist:
+            _save()
+    return dropped
+
+
 def generation() -> int:
     """Monotonic counter that changes whenever the cache content changes.
 
@@ -235,27 +278,31 @@ def generation() -> int:
 
 def best_entry(
     b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int,
-    dtype: str = "float32",
+    dtype: str = "float32", *, epilogue=None,
 ) -> dict | None:
     """Cache-only consult: the full per-direction record, or None."""
-    return lookup(layer_key(b, n_in, n_k, cin, cout, padding, dtype))
+    return lookup(
+        layer_key(b, n_in, n_k, cin, cout, padding, dtype, epilogue=epilogue)
+    )
 
 
 def best_method(
     b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int,
-    dtype: str = "float32",
+    dtype: str = "float32", *, epilogue=None,
 ) -> dict | None:
     """Cache-only consult (no measurement): the ``fwd`` entry or None."""
-    rec = best_entry(b, n_in, n_k, cin, cout, padding, dtype)
+    rec = best_entry(b, n_in, n_k, cin, cout, padding, dtype,
+                     epilogue=epilogue)
     return rec.get("fwd") if rec else None
 
 
 def best_bwd(
     b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int,
-    dtype: str = "float32",
+    dtype: str = "float32", *, epilogue=None,
 ) -> dict | None:
     """Cache-only consult (no measurement): the ``bwd`` entry or None."""
-    rec = best_entry(b, n_in, n_k, cin, cout, padding, dtype)
+    rec = best_entry(b, n_in, n_k, cin, cout, padding, dtype,
+                     epilogue=epilogue)
     return rec.get("bwd") if rec else None
 
 
@@ -278,23 +325,40 @@ def _tile_geometry(
     return m, R, Hp, Wp, th, tw, n_h, n_w, ct, ci
 
 
+def epilogue_postop_bytes(b: int, m: int, cout: int) -> int:
+    """Extra HBM traffic of running a layer's bias+activation as post-ops:
+    one more fused elementwise pass over the fp32 output map (read the
+    conv result back + write the activated map) that the in-kernel
+    epilogue eliminates."""
+    return 2 * b * m * m * cout * 4
+
+
 def roofline_proxy(
     method: str, b: int, n_in: int, n_k: int, cin: int, cout: int,
     padding: int = 0, *, tile_h: int | None = None, tile_w: int | None = None,
-    dtype_bytes: int = 4,
+    dtype_bytes: int = 4, epilogue=None, fuse_epilogue: bool = True,
 ) -> float:
     """Analytic seconds for the forward Pallas grids: max(compute, HBM).
 
     Models exactly what each grid moves per step: the per-phase kernel
     re-fetches the full ``(Np, Np, ci)`` plane for every ``(phase, cout_tile,
     cin_tile)`` step; the fused kernel fetches one halo'd spatial tile per
-    step and serves all four phases from it.
+    step and serves all four phases from it. An ``epilogue`` adds its
+    elementwise FLOPs either way; with ``fuse_epilogue=False`` it also adds
+    the post-op output round trip (:func:`epilogue_postop_bytes`) the
+    in-kernel epilogue avoids.
     """
     m, R, Hp, Wp, th, tw, n_h, n_w, ct, ci = _tile_geometry(
         n_in, n_k, padding, tile_h, tile_w, cin, cout
     )
     n_co, n_ci = cout // ct, cin // ci
     flops = 2 * b * seg.flop_count(n_in, n_k, cin, cout, padding)
+    epi = epilib.canonical(epilogue)
+    epi_bytes = 0
+    if epi is not None:
+        flops += (int(epi.bias) + int(epi.act != "none")) * b * m * m * cout
+        if not fuse_epilogue:
+            epi_bytes = epilogue_postop_bytes(b, m, cout)
     # fp32 out blocks are written n_ci times and re-read (n_ci - 1) times
     out_rw = (2 * n_ci - 1) * 4
     if method in ("pallas_phase", "pallas-phase"):
@@ -309,7 +373,7 @@ def roofline_proxy(
         out_b = b * n_h * n_w * n_co * th * tw * 4 * ct * out_rw
     else:
         raise ValueError(f"no roofline model for method {method!r}")
-    bytes_moved = in_b + w_b + out_b
+    bytes_moved = in_b + w_b + out_b + epi_bytes
     return max(flops / PEAK_FLOPS, bytes_moved / PEAK_BW)
 
 
@@ -332,7 +396,7 @@ def best_fused_proxy(
 def bwd_roofline_proxy(
     method: str, b: int, n_in: int, n_k: int, cin: int, cout: int,
     padding: int = 0, *, tile_h: int | None = None, tile_w: int | None = None,
-    dtype_bytes: int = 4,
+    dtype_bytes: int = 4, epilogue=None,
 ) -> float:
     """Analytic seconds for the full backward pass (dx + dw).
 
@@ -358,6 +422,8 @@ def bwd_roofline_proxy(
     R = seg.ceil_half(n_k)
     Hp = Wp = (m + 1) // 2
     macs2 = 2 * b * seg.flop_count(n_in, n_k, cin, cout, padding)
+    epi = epilib.canonical(epilogue)
+    g_plane = b * m * m * cout * 4  # one fp32 pass over the cotangent map
     if method in ("pallas", "pallas_bwd"):
         flops = 2 * macs2  # dx + dw, exact extents
         # dx grid (b, n_h, n_w, cin_tile, cout_tile)
@@ -382,6 +448,10 @@ def bwd_roofline_proxy(
         # resident accumulator: one fp32 write per (cin, cout) stack block
         dw_out = (cin // ci_w) * (cout // co_w) * 4 * R * R * ci_w * co_w * 4
         bytes_moved = dx_in + dx_w + dx_out + dw_in + dw_out
+        if epi is not None and epi.saves_output:
+            # fused gm = g * act'(y) prologue: read g + y, write gm once;
+            # db rides in the dw accumulator for free
+            bytes_moved += 3 * g_plane
     elif method == "lax":
         over = ((Hp + R - 1) / Hp) ** 2  # conv input-grad zero-frame waste
         flops = (1 + over) * macs2
@@ -398,6 +468,12 @@ def bwd_roofline_proxy(
             + dw_b             # per-phase sub-kernel reads (dx pass)
             + 2 * dw_b         # dw write + read-back
         )
+        if epi is not None and epi.saves_output:
+            # unfused epilogue grad: the act' mask is materialized (read y,
+            # write mask, re-read with g, write gm) + the separate db pass
+            bytes_moved += 5 * g_plane
+        elif epi is not None and epi.bias:
+            bytes_moved += g_plane  # separate db reduction re-reads g
     else:
         raise ValueError(f"no backward roofline model for method {method!r}")
     return max(flops / PEAK_FLOPS, bytes_moved / PEAK_BW)
@@ -430,35 +506,58 @@ DEFAULT_CANDIDATES = LAX_CANDIDATES + PALLAS_CANDIDATES
 BWD_CANDIDATES = ("lax", "pallas")
 
 
-def _tune_fwd(
-    x, k, padding, lax_methods, pallas_methods, include_pallas,
-    repeats, warmup,
-):
+def _layer_fn(padding, method, epi):
+    """Whole-layer callable ``act(tconv(x, k) + b)`` for one lax method —
+    the epilogue is composed (XLA fuses elementwise tails), so every
+    candidate races the SAME full layer the dispatch will execute."""
     from repro.core import transpose_conv as tc
+
+    def fn(x, k, bvec=None):
+        y = tc.transpose_conv2d(x, k, padding, method=method)
+        return epi.apply(y, bvec) if epi is not None else y
+
+    return fn
+
+
+def _tune_fwd(
+    x, k, bvec, padding, lax_methods, pallas_methods, include_pallas,
+    repeats, warmup, epi,
+):
     from repro.kernels.transpose_conv2d import (
         transpose_conv2d_pallas, transpose_conv2d_pallas_phase,
     )
 
     b, n_in, _, cin = x.shape
     n_k, cout = k.shape[0], k.shape[3]
+    args = (x, k) if epi is None or not epi.bias else (x, k, bvec)
     candidates: dict[str, float] = {}
     for name in lax_methods:
-        fn = jax.jit(
-            lambda x, k, _m=name: tc.transpose_conv2d(x, k, padding, method=_m)
-        )
-        candidates[name] = _time_fn(fn, x, k, repeats=repeats, warmup=warmup)
+        fn = jax.jit(_layer_fn(padding, name, epi))
+        candidates[name] = _time_fn(fn, *args, repeats=repeats, warmup=warmup)
 
     itemsize = jnp.dtype(x.dtype).itemsize
     fused_s, (tile_h, tile_w) = best_fused_proxy(
         b, n_in, n_k, cin, cout, padding, dtype_bytes=itemsize
     )
     proxy = {
-        "pallas_fused": fused_s,
+        "pallas_fused": roofline_proxy(
+            "pallas_fused", b, n_in, n_k, cin, cout, padding,
+            tile_h=tile_h, tile_w=tile_w, dtype_bytes=itemsize,
+            epilogue=epi,
+        ),
         "pallas_phase": roofline_proxy(
             "pallas_phase", b, n_in, n_k, cin, cout, padding,
-            dtype_bytes=itemsize,
+            dtype_bytes=itemsize, epilogue=epi,
         ),
     }
+    if epi is not None:
+        # the unfused variant pays the post-op output round trip
+        proxy["pallas_fused+postops"] = roofline_proxy(
+            "pallas_fused", b, n_in, n_k, cin, cout, padding,
+            tile_h=tile_h, tile_w=tile_w, dtype_bytes=itemsize,
+            epilogue=epi, fuse_epilogue=False,
+        )
+    fuse_epi = True
     if include_pallas:
         for name in pallas_methods:
             if name == "pallas_fused":
@@ -467,42 +566,63 @@ def _tune_fwd(
                 for th, tw in _FUSED_TILES:
                     times[(th, tw)] = _time_fn(
                         jax.jit(
-                            lambda x, k, _th=th, _tw=tw:
+                            lambda *a, _th=th, _tw=tw:
                             transpose_conv2d_pallas(
-                                x, k, padding, tile_h=_th, tile_w=_tw
+                                a[0], a[1], padding, tile_h=_th, tile_w=_tw,
+                                epilogue=epi,
+                                bias=a[2] if len(a) > 2 else None,
                             )
                         ),
-                        x, k, repeats=repeats, warmup=warmup,
+                        *args, repeats=repeats, warmup=warmup,
                     )
                 (tile_h, tile_w), best = min(
                     times.items(), key=lambda kv: kv[1]
                 )
                 candidates[name] = best
+                if epi is not None:
+                    # fused-epilogue vs unfused: the bare kernel at the
+                    # winning tiles + composed post-ops
+                    def unfused(x, k, bvec=None, _th=tile_h, _tw=tile_w):
+                        y = transpose_conv2d_pallas(
+                            x, k, padding, tile_h=_th, tile_w=_tw
+                        )
+                        return epi.apply(y, bvec)
+
+                    candidates["pallas_fused+postops"] = _time_fn(
+                        jax.jit(unfused), *args,
+                        repeats=repeats, warmup=warmup,
+                    )
             else:
                 candidates[name] = _time_fn(
                     jax.jit(
-                        lambda x, k: transpose_conv2d_pallas_phase(
-                            x, k, padding
+                        lambda *a: transpose_conv2d_pallas_phase(
+                            a[0], a[1], padding, epilogue=epi,
+                            bias=a[2] if len(a) > 2 else None,
                         )
                     ),
-                    x, k, repeats=repeats, warmup=warmup,
+                    *args, repeats=repeats, warmup=warmup,
                 )
 
     winner = min(candidates, key=candidates.get)
+    if winner == "pallas_fused+postops":
+        winner_method, fuse_epi = "pallas_fused", False
+    else:
+        winner_method = winner
     entry = {
-        "method": winner,
+        "method": winner_method,
         "time_s": candidates[winner],
         "source": "measured",
         "candidates": candidates,
         "proxy": proxy,
     }
-    if winner == "pallas_fused":
+    if winner_method == "pallas_fused":
         entry["tile_h"], entry["tile_w"] = tile_h, tile_w
+        if epi is not None:
+            entry["fuse_epilogue"] = fuse_epi
     return entry, (tile_h, tile_w)
 
 
-def _tune_bwd(x, k, padding, include_pallas, repeats, warmup):
-    from repro.core import transpose_conv as tc
+def _tune_bwd(x, k, bvec, padding, include_pallas, repeats, warmup, epi):
     from repro.kernels import ops
     from repro.kernels.transpose_conv2d_bwd import transpose_conv2d_bwd_pallas
 
@@ -511,11 +631,18 @@ def _tune_bwd(x, k, padding, include_pallas, repeats, warmup):
     m = seg.output_size(n_in, n_k, padding)
     rng = np.random.default_rng(1)
     g = jnp.asarray(rng.normal(size=(b, m, m, cout)), dtype=jnp.float32)
+    # epilogue'd backwards consume the saved forward output y
+    y = None
+    if epi is not None and epi.saves_output:
+        y = jax.block_until_ready(
+            _layer_fn(padding, "unified_reshape", epi)(x, k, bvec)
+        )
 
     candidates: dict[str, float] = {
-        # the cached jitted closure repro.kernels.ops dispatches to
+        # the cached jitted closure repro.kernels.ops dispatches to (the
+        # lax VJP composes the identical epilogue backward: gm from y, db)
         "lax": _time_fn(
-            lambda x, k, g: ops._lax_bwd(padding, (x, k), g),
+            lambda x, k, g: ops._lax_bwd(padding, (x, k, y, bvec), g, epi),
             x, k, g, repeats=repeats, warmup=warmup,
         )
     }
@@ -524,9 +651,13 @@ def _tune_bwd(x, k, padding, include_pallas, repeats, warmup):
         b, n_in, n_k, cin, cout, padding, dtype_bytes=itemsize
     )
     proxy = {
-        "pallas": pallas_s,
+        "pallas": bwd_roofline_proxy(
+            "pallas", b, n_in, n_k, cin, cout, padding,
+            tile_h=tile_h, tile_w=tile_w, dtype_bytes=itemsize, epilogue=epi,
+        ),
         "lax": bwd_roofline_proxy(
-            "lax", b, n_in, n_k, cin, cout, padding, dtype_bytes=itemsize
+            "lax", b, n_in, n_k, cin, cout, padding, dtype_bytes=itemsize,
+            epilogue=epi,
         ),
     }
     if include_pallas:
@@ -534,17 +665,39 @@ def _tune_bwd(x, k, padding, include_pallas, repeats, warmup):
         for th, tw in _BWD_TILES:
             times[(th, tw)] = _time_fn(
                 lambda x, k, g, _th=th, _tw=tw: transpose_conv2d_bwd_pallas(
-                    x, k, g, padding, tile_h=_th, tile_w=_tw
+                    x, k, g, padding, tile_h=_th, tile_w=_tw,
+                    epilogue=epi, y=y,
                 ),
                 x, k, g, repeats=repeats, warmup=warmup,
             )
         (tile_h, tile_w), best = min(times.items(), key=lambda kv: kv[1])
         candidates["pallas"] = best
+        if epi is not None:
+            # fused prologue + in-launch db vs the unfused variant: act'
+            # masking and the db reduction as separate passes
+            def unfused(x, k, g, _th=tile_h, _tw=tile_w):
+                gm = g if y is None else epi.grad_from_y(g, y)
+                out = transpose_conv2d_bwd_pallas(
+                    x, k, gm, padding, tile_h=_th, tile_w=_tw
+                )
+                if epi.bias:
+                    out = out + (gm.sum((0, 1, 2)),)
+                return out
 
-    winner = min(candidates, key=candidates.get)
+            candidates["pallas+postops"] = _time_fn(
+                unfused, x, k, g, repeats=repeats, warmup=warmup,
+            )
+
+    # dispatch implements the fused prologue only: the winner is picked
+    # among implementable candidates; "pallas+postops" stays in the record
+    # as the measured unfused reference
+    dispatchable = {
+        n: t for n, t in candidates.items() if n in BWD_CANDIDATES
+    }
+    winner = min(dispatchable, key=dispatchable.get)
     entry = {
         "method": winner,
-        "time_s": candidates[winner],
+        "time_s": dispatchable[winner],
         "source": "measured",
         "candidates": candidates,
         "proxy": proxy,
@@ -555,8 +708,8 @@ def _tune_bwd(x, k, padding, include_pallas, repeats, warmup):
 
 
 def _tune_step(
-    x, k, padding, lax_methods, pallas_methods, include_pallas,
-    repeats, warmup, fwd_tiles,
+    x, k, bvec, padding, lax_methods, pallas_methods, include_pallas,
+    repeats, warmup, fwd_tiles, epi,
 ):
     """Race the full fwd+bwd value_and_grad per forward method.
 
@@ -564,39 +717,62 @@ def _tune_step(
     ``bwd="auto"``, i.e. whatever the just-recorded ``bwd`` entry selects —
     the joint tuning the training dispatch relies on. ``pallas_fused`` runs
     at the forward race's winning tiles, the exact configuration the entry
-    records and train-mode dispatch will replay.
+    records and train-mode dispatch will replay. Epilogue'd layers race the
+    whole ``act(tconv + b)`` unit — gradients include ``db`` — and the
+    fused-epilogue Pallas step races its unfused kernel-plus-post-ops
+    variant (``pallas_fused+postops``, whose backward materializes the
+    act' mask through plain AD instead of the fused prologue).
     """
-    from repro.core import transpose_conv as tc
     from repro.kernels import ops
 
     methods = tuple(lax_methods)
     if include_pallas:
         methods += tuple(pallas_methods)
+        if epi is not None and "pallas_fused" in methods:
+            methods += ("pallas_fused+postops",)
+    with_bias = epi is not None and epi.bias
+    args = (x, k, bvec) if with_bias else (x, k)
+    argnums = (0, 1, 2) if with_bias else (0, 1)
     candidates: dict[str, float] = {}
     for name in methods:
         if name == "pallas_fused":
             th, tw = fwd_tiles
 
-            def loss(x, k, _th=th, _tw=tw):
+            def loss(*a, _th=th, _tw=tw):
                 return ops.transpose_conv2d_pallas(
-                    x, k, padding, _th, _tw, "auto"
+                    a[0], a[1], padding, _th, _tw, "auto", epi,
+                    a[2] if len(a) > 2 else None,
                 ).sum()
-        else:
-            def loss(x, k, _m=name):
-                return tc.transpose_conv2d(x, k, padding, method=_m).sum()
+        elif name == "pallas_fused+postops":
+            th, tw = fwd_tiles
 
-        fn = jax.jit(jax.value_and_grad(loss, argnums=(0, 1)))
-        candidates[name] = _time_fn(fn, x, k, repeats=repeats, warmup=warmup)
+            def loss(*a, _th=th, _tw=tw):
+                y = ops.transpose_conv2d_pallas(
+                    a[0], a[1], padding, _th, _tw, "auto"
+                )
+                return epi.apply(y, a[2] if len(a) > 2 else None).sum()
+        else:
+            def loss(*a, _m=name):
+                return _layer_fn(padding, _m, epi)(*a).sum()
+
+        fn = jax.jit(jax.value_and_grad(loss, argnums=argnums))
+        candidates[name] = _time_fn(fn, *args, repeats=repeats, warmup=warmup)
 
     winner = min(candidates, key=candidates.get)
+    fuse_epi = True
+    winner_method = winner
+    if winner == "pallas_fused+postops":
+        winner_method, fuse_epi = "pallas_fused", False
     entry = {
-        "method": winner,
+        "method": winner_method,
         "time_s": candidates[winner],
         "source": "measured",
         "candidates": candidates,
     }
-    if winner == "pallas_fused":
+    if winner_method == "pallas_fused":
         entry["tile_h"], entry["tile_w"] = fwd_tiles
+        if epi is not None:
+            entry["fuse_epilogue"] = fuse_epi
     return entry
 
 
@@ -605,6 +781,7 @@ def tune_layer(
     *, dtype=jnp.float32, methods: tuple | None = None,
     repeats: int = 3, warmup: int = 1, persist: bool = True,
     include_pallas: bool | None = None, train: bool = False,
+    epilogue=None,
 ) -> dict:
     """Measure candidates for one layer shape, record + return the record.
 
@@ -620,8 +797,15 @@ def tune_layer(
     dispatches to) and the ``step`` direction (full value_and_grad per
     forward method — what ``method="auto", train=True`` dispatches to).
     Returns the full per-direction record.
+
+    ``epilogue`` (an :class:`~repro.kernels.epilogue.Epilogue`) makes the
+    whole ``act(tconv + b)`` layer the tuned unit — its own cache
+    signature (schema v3): every candidate runs the full layer, and the
+    Pallas kernels additionally race their fused-epilogue variant against
+    the unfused kernel-plus-post-ops spelling in every direction.
     """
     backend = jax.default_backend()
+    epilogue = epilib.canonical(epilogue)
     if include_pallas is None:
         # the Pallas kernels are TPU-lowered (TPU compiler params, Unblocked
         # indexing); everywhere else they only run interpreted
@@ -641,13 +825,17 @@ def tune_layer(
     k = jnp.asarray(
         rng.normal(size=(n_k, n_k, cin, cout)) * 0.05, dtype=dtype
     )
+    bvec = None
+    if epilogue is not None and epilogue.bias:
+        bvec = jnp.asarray(rng.normal(size=(cout,)) * 0.1, dtype=dtype)
 
     key = layer_key(
-        b, n_in, n_k, cin, cout, padding, str(jnp.dtype(dtype)), backend
+        b, n_in, n_k, cin, cout, padding, str(jnp.dtype(dtype)), backend,
+        epilogue=epilogue,
     )
     fwd_entry, fwd_tiles = _tune_fwd(
-        x, k, padding, lax_methods, pallas_methods, include_pallas,
-        repeats, warmup,
+        x, k, bvec, padding, lax_methods, pallas_methods, include_pallas,
+        repeats, warmup, epilogue,
     )
     # one disk write per tune_layer: intermediate directions stay in memory
     record(key, fwd_entry, direction="fwd", persist=persist and not train)
@@ -656,11 +844,13 @@ def tune_layer(
 
     # bwd before step: the step race differentiates the Pallas forwards
     # through bwd="auto", which consults the entry recorded here
-    bwd_entry = _tune_bwd(x, k, padding, include_pallas, repeats, warmup)
+    bwd_entry = _tune_bwd(
+        x, k, bvec, padding, include_pallas, repeats, warmup, epilogue
+    )
     record(key, bwd_entry, direction="bwd", persist=False)
     step_entry = _tune_step(
-        x, k, padding, lax_methods, pallas_methods, include_pallas,
-        repeats, warmup, fwd_tiles,
+        x, k, bvec, padding, lax_methods, pallas_methods, include_pallas,
+        repeats, warmup, fwd_tiles, epilogue,
     )
     record(key, step_entry, direction="step", persist=persist)
     return lookup(key)
@@ -668,47 +858,77 @@ def tune_layer(
 
 def tune_gan_zoo(
     *, batch: int = 1, repeats: int = 3, persist: bool = True,
-    train: bool = False,
+    train: bool = False, epilogues: bool = True,
 ) -> dict[str, dict]:
-    """Tune every distinct Table-4 GAN layer shape; returns {key: record}."""
-    from repro.models.gan import GAN_ZOO
+    """Tune every distinct Table-4 GAN layer shape; returns {key: record}.
+
+    ``epilogues=True`` (default) tunes the signatures the generators
+    actually dispatch: each layer fused with its bias+activation tail
+    (relu mid-stack, tanh on the output layer —
+    :func:`repro.models.gan.generator_epilogues`). ``epilogues=False``
+    tunes the bare transpose-conv signatures (the pre-v3 behaviour).
+    """
+    from repro.models.gan import GAN_ZOO, generator_epilogues
 
     out = {}
     seen = set()
     for cfg in GAN_ZOO.values():
-        for hw, cin, cout in cfg.layers:
+        epis = (
+            generator_epilogues(cfg) if epilogues
+            else (None,) * len(cfg.layers)
+        )
+        for (hw, cin, cout), epi in zip(cfg.layers, epis):
             sig = (batch, hw, cfg.kernel, cin, cout, cfg.padding)
-            if sig in seen:
+            if (sig, epi) in seen:
                 continue
-            seen.add(sig)
+            seen.add((sig, epi))
             entry = tune_layer(*sig, repeats=repeats, persist=persist,
-                               train=train)
-            out[layer_key(*sig)] = entry
+                               train=train, epilogue=epi)
+            out[layer_key(*sig, epilogue=epi)] = entry
     return out
 
 
 def main(argv=None):
-    """CLI: populate the persistent cache.
+    """CLI: populate (or clean) the persistent cache.
 
     PYTHONPATH=src python -m repro.kernels.autotune --gan-zoo
     PYTHONPATH=src python -m repro.kernels.autotune --gan-zoo --train
     PYTHONPATH=src python -m repro.kernels.autotune --layer 1 8 4 512 256 2
+    PYTHONPATH=src python -m repro.kernels.autotune --prune
     """
     import argparse
 
     ap = argparse.ArgumentParser(description=main.__doc__)
     g = ap.add_mutually_exclusive_group(required=True)
     g.add_argument("--gan-zoo", action="store_true",
-                   help="tune every distinct Table-4 GAN layer shape")
+                   help="tune every distinct Table-4 GAN layer shape "
+                        "(fused with the generator epilogues by default)")
     g.add_argument("--layer", nargs=6, type=int,
                    metavar=("B", "N", "K", "CIN", "COUT", "PAD"))
+    g.add_argument("--prune", action="store_true",
+                   help="drop cache entries whose layer signature no "
+                        "longer parses under the current schema version")
     ap.add_argument("--train", action="store_true",
                     help="also tune the bwd + full-train-step directions")
+    ap.add_argument("--no-epilogue", action="store_true",
+                    help="tune bare transpose-conv signatures (no fused "
+                         "bias+activation epilogues)")
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args(argv)
 
+    if args.prune:
+        dropped = prune_cache()
+        print(f"# cache: {cache_path()}")
+        for k in dropped:
+            print(f"pruned {k}")
+        print(f"# pruned {len(dropped)} unparsable "
+              f"entr{'y' if len(dropped) == 1 else 'ies'} "
+              f"(schema v{_CACHE_VERSION})")
+        return
+
     if args.gan_zoo:
-        entries = tune_gan_zoo(repeats=args.repeats, train=args.train)
+        entries = tune_gan_zoo(repeats=args.repeats, train=args.train,
+                               epilogues=not args.no_epilogue)
     else:
         entry = tune_layer(*args.layer, repeats=args.repeats,
                            train=args.train)

@@ -1,0 +1,156 @@
+"""Fused bias+activation epilogues for the unified transpose conv.
+
+The paper's unified kernel wins by touching each output feature map exactly
+once — but a GAN layer is ``act(tconv(x, W) + b)``, and running ``+ b`` and
+the activation as separate post-ops re-reads and re-writes that map twice
+more per layer (forward AND backward). HUGE² (arXiv:1907.11210) and GANAX
+(arXiv:1806.01107) both show GAN deconvolution pipelines are memory-bound
+and fold the surrounding elementwise work into the deconv operator;
+:class:`Epilogue` is that fold for this repo.
+
+An ``Epilogue`` is an immutable, hashable record of the elementwise tail of
+one layer: whether a per-output-channel bias is added, and which activation
+follows (``none`` / ``relu`` / ``tanh`` / ``leaky_relu``). Being hashable it
+rides inside :class:`repro.kernels.plan.LayerPlan` (a static jit key) and
+inside the autotune cache's layer signature (schema v3).
+
+Backward discipline: every supported activation's derivative is expressible
+from the **saved post-activation output** ``y`` alone —
+
+* ``relu``:       ``act'(y) = 1[y > 0]``        (y > 0 ⇔ pre-act > 0)
+* ``leaky_relu``: ``act'(y) = 1[y > 0] + slope·1[y <= 0]``  (slope > 0)
+* ``tanh``:       ``act'(y) = 1 - y²``          (y = tanh(pre-act))
+
+so the custom VJP saves ``y`` instead of re-computing the pre-activation,
+and the backward's first step is the single fused read ``g · act'(y)``
+(:func:`Epilogue.grad_from_y` — the Pallas prologue in
+``transpose_conv2d_bwd`` computes exactly this).
+
+``relu``/``leaky_relu`` are implemented as ``where(y > 0, ...)`` in both the
+forward apply and the gradient so the fused-epilogue path and the
+unfused-kernel-plus-post-ops path differentiate **identically** (jax's AD of
+``where`` picks the same branch indicator).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+
+ACTIVATIONS = ("none", "relu", "tanh", "leaky_relu")
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Elementwise tail of one transpose-conv layer: ``act(y + bias)``.
+
+    Immutable + hashable — usable as a static jit argument, a
+    :class:`~repro.kernels.plan.LayerPlan` field, and an autotune layer-key
+    component (:meth:`tag`).
+    """
+
+    bias: bool = False
+    act: str = "none"
+    slope: float = 0.2  # leaky_relu negative slope (generator zoo uses 0.2)
+
+    def __post_init__(self):
+        if self.act not in ACTIVATIONS:
+            raise ValueError(
+                f"unknown activation {self.act!r}; one of {ACTIVATIONS}"
+            )
+        if self.act == "leaky_relu" and not self.slope > 0:
+            raise ValueError(
+                f"leaky_relu slope must be > 0 (got {self.slope}): the "
+                "backward recovers the pre-activation sign from y's sign"
+            )
+
+    @property
+    def is_identity(self) -> bool:
+        return not self.bias and self.act == "none"
+
+    @property
+    def saves_output(self) -> bool:
+        """Whether the VJP must save the post-activation output ``y``."""
+        return self.act != "none"
+
+    def tag(self) -> str:
+        """Canonical short form for cache keys / bench labels.
+
+        ``none`` | ``b`` | ``relu`` | ``b+relu`` | ``b+leaky0.2`` | ...
+        """
+        if self.is_identity:
+            return "none"
+        a = self.act
+        if a == "leaky_relu":
+            a = f"leaky{self.slope:g}"
+        if a == "none":
+            return "b"
+        return f"b+{a}" if self.bias else a
+
+    # ---------------------------------------------------------- forward
+
+    def apply_act(self, y):
+        """The activation alone (static python dispatch on ``self.act``)."""
+        if self.act == "relu":
+            return jnp.where(y > 0, y, jnp.zeros_like(y))
+        if self.act == "leaky_relu":
+            return jnp.where(y > 0, y, self.slope * y)
+        if self.act == "tanh":
+            return jnp.tanh(y)
+        return y
+
+    def apply(self, y, bias=None):
+        """``act(y + bias)`` — the composed post-op form.
+
+        This is the reference the fused kernels are tested against, and
+        what the lax fallback composes so every method stays numerically
+        interchangeable.
+        """
+        if self.bias:
+            if bias is None:
+                raise ValueError(f"epilogue {self.tag()!r} requires a bias")
+            y = y + bias.astype(y.dtype)
+        return self.apply_act(y)
+
+    # --------------------------------------------------------- backward
+
+    def grad_from_y(self, g, y):
+        """``g · act'(y)`` from the SAVED post-activation output ``y``.
+
+        One fused read of ``y`` instead of materializing ``act'``
+        separately; see the module docstring for why ``y`` suffices.
+        """
+        if self.act == "relu":
+            return jnp.where(y > 0, g, jnp.zeros_like(g))
+        if self.act == "leaky_relu":
+            return jnp.where(y > 0, g, self.slope * g)
+        if self.act == "tanh":
+            return g * (1.0 - y * y)
+        return g
+
+
+IDENTITY = Epilogue()
+
+
+def canonical(epilogue: Epilogue | None) -> Epilogue | None:
+    """Normalize: identity epilogues become None (the no-epilogue fast path
+    everywhere — kernels, plans, cache keys)."""
+    if epilogue is None or epilogue.is_identity:
+        return None
+    return epilogue
+
+
+@functools.lru_cache(maxsize=None)
+def _make_cached(has_bias: bool, act: str, slope: float) -> Epilogue | None:
+    return canonical(Epilogue(bias=has_bias, act=act, slope=slope))
+
+
+def make(bias, act: str = "none", slope: float = 0.2) -> Epilogue | None:
+    """Epilogue from a (possibly None) bias array + activation name.
+
+    Memoized on (bias-presence, act, slope) — this runs on the per-call
+    dispatch path (``transpose_conv2d``), which the plan-dispatch benchmark
+    gates, so construction + validation happen once per distinct tail."""
+    return _make_cached(bias is not None, act, slope)

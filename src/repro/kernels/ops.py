@@ -1,15 +1,26 @@
 """Jit'd, differentiable wrappers around the Pallas transpose-conv kernels.
 
 Forward: the phase-fused spatially-tiled kernel is the default; the legacy
-per-phase grid stays available as the autotuner baseline. Backward: the
-custom VJP dispatches per layer shape between
+per-phase grid stays available as the autotuner baseline. Both take an
+optional fused :class:`~repro.kernels.epilogue.Epilogue` (``+ bias`` then
+activation, applied on the fp32 accumulator before the single store) plus
+the differentiable ``bias`` vector. Backward: the custom VJP dispatches per
+layer shape between
 
 * the **segregated Pallas backward** (:mod:`repro.kernels.transpose_conv2d_bwd`
-  — dx + dw as first-class kernels, the training hot path), and
+  — dx + dw as first-class kernels, the training hot path; epilogue'd
+  layers prepend the fused ``gm = g · act'(y)`` prologue and reduce ``db``
+  inside the dw launch), and
 * the **lax VJP** of the mathematically-identical ``transpose_conv_unified``
-  (the candidate/fallback; its jitted closure is built once per
-  ``(padding, shapes, dtypes)`` instead of re-tracing ``jax.vjp`` on every
-  backward call).
+  (the candidate/fallback; its jitted closure — which composes the SAME
+  epilogue, so the two backends stay numerically interchangeable — is
+  built once per ``(padding, epilogue, shapes, dtypes)`` instead of
+  re-tracing ``jax.vjp`` on every backward call).
+
+Epilogue residuals: the VJP saves the forward **output** ``y`` (only when
+the epilogue has an activation) instead of recomputing the pre-activation —
+every supported activation's derivative is a function of ``y`` alone (see
+:mod:`repro.kernels.epilogue`).
 
 The backward selector ``bwd`` is either a :class:`repro.kernels.plan.LayerPlan`
 — the compiled-plan path: the plan already carries the resolved backward
@@ -31,6 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.transpose_conv import transpose_conv_unified
+from repro.kernels import epilogue as epilib
 from repro.kernels.plan import LayerPlan, _cold_bwd
 from repro.kernels.transpose_conv2d import (
     transpose_conv2d_pallas as _pallas_fused_fwd,
@@ -42,34 +54,50 @@ BWD_METHODS = ("auto", "pallas", "lax")
 
 
 @functools.lru_cache(maxsize=None)
-def _unified_vjp_fn(padding, x_shape, x_dtype, k_shape, k_dtype):
-    """Jitted lax-VJP closure, traced once per (padding, shapes, dtypes).
+def _unified_vjp_fn(padding, epi, x_shape, x_dtype, k_shape, k_dtype):
+    """Jitted lax-VJP closure, traced once per (padding, epilogue, shapes,
+    dtypes).
 
     The jit cache (keyed by the same signature) means repeated eager
     backward calls replay the compiled VJP instead of re-tracing the primal
-    through ``jax.vjp`` every step.
+    through ``jax.vjp`` every step. ``epi`` (a hashable Epilogue or None)
+    folds the epilogue's backward in: the masked cotangent
+    ``gm = g · act'(y)`` is computed from the saved output inside the same
+    compiled closure, and ``db = Σ gm`` rides along when the epilogue has a
+    bias — one XLA computation for the whole layer backward.
     """
 
     @jax.jit
-    def bwd(x, kernel, g):
+    def bwd(x, kernel, y, g):
+        gm = g if epi is None else epi.grad_from_y(g, y)
+        gm = gm.astype(jnp.result_type(x, kernel))
         _, vjp = jax.vjp(
             lambda a, b: transpose_conv_unified(a, b, padding), x, kernel
         )
-        return vjp(g)
+        dx, dw = vjp(gm)
+        if epi is not None and epi.bias:
+            return dx, dw, gm.astype(jnp.float32).sum((0, 1, 2))
+        return dx, dw, None
 
     return bwd
 
 
-def _lax_bwd(padding, res, g):
-    x, kernel = res
+def _lax_bwd(padding, res, g, epi=None):
+    x, kernel, y, bias = res
+    epi = epilib.canonical(epi)
     fn = _unified_vjp_fn(
-        padding, x.shape, str(x.dtype), kernel.shape, str(kernel.dtype)
+        padding, epi, x.shape, str(x.dtype), kernel.shape, str(kernel.dtype)
     )
-    return fn(x, kernel, g.astype(jnp.result_type(x, kernel)))
+    # y is unused by identity/bias-only epilogues; feed g as a placeholder
+    # so the closure signature stays uniform
+    dx, dw, db = fn(x, kernel, g if y is None else y, g)
+    if epi is not None and epi.bias:
+        return dx, dw, db.astype(bias.dtype)
+    return dx, dw, None
 
 
 @functools.lru_cache(maxsize=None)
-def _resolve_bwd_cached(b, n_in, n_k, cin, cout, padding, dtype, epoch):
+def _resolve_bwd_cached(b, n_in, n_k, cin, cout, padding, dtype, epi, epoch):
     """Memoized (method, dx_tile_h, dx_tile_w) per (layer signature, cache
     generation). ``epoch`` is only a memo key: the generation counter is
     monotonic and bumps on every cache mutation, so a stale resolution can
@@ -77,7 +105,9 @@ def _resolve_bwd_cached(b, n_in, n_k, cin, cout, padding, dtype, epoch):
     del epoch
     from repro.kernels import autotune
 
-    entry = autotune.best_bwd(b, n_in, n_k, cin, cout, padding, dtype)
+    entry = autotune.best_bwd(
+        b, n_in, n_k, cin, cout, padding, dtype, epilogue=epi
+    )
     if entry is not None:
         return (
             entry.get("method", "lax"),
@@ -86,7 +116,7 @@ def _resolve_bwd_cached(b, n_in, n_k, cin, cout, padding, dtype, epoch):
     return _cold_bwd(), None, None
 
 
-def _resolve_bwd(x, kernel, padding):
+def _resolve_bwd(x, kernel, padding, epi=None):
     """(method, dx_tile_h, dx_tile_w) for this layer shape.
 
     Tuned cache entry -> measured winner; cold cache -> Pallas on a real
@@ -98,24 +128,34 @@ def _resolve_bwd(x, kernel, padding):
 
     return _resolve_bwd_cached(
         x.shape[0], x.shape[1], kernel.shape[0], kernel.shape[2],
-        kernel.shape[3], padding, str(x.dtype), autotune.generation(),
+        kernel.shape[3], padding, str(x.dtype), epilib.canonical(epi),
+        autotune.generation(),
     )
 
 
-def _pallas_bwd(padding, res, g, tile_h=None, tile_w=None):
-    x, kernel = res
-    dx, dw = transpose_conv2d_bwd_pallas(
-        x, kernel, g, padding, tile_h=tile_h, tile_w=tile_w
+def _pallas_bwd(padding, res, g, tile_h=None, tile_w=None, epi=None):
+    x, kernel, y, bias = res
+    epi = epilib.canonical(epi)
+    grads = transpose_conv2d_bwd_pallas(
+        x, kernel, g, padding, tile_h=tile_h, tile_w=tile_w,
+        epilogue=epi, y=y,
     )
-    return dx.astype(x.dtype), dw.astype(kernel.dtype)
+    if epi is not None and epi.bias:
+        dx, dw, db = grads
+        return (
+            dx.astype(x.dtype), dw.astype(kernel.dtype),
+            db.astype(bias.dtype),
+        )
+    dx, dw = grads
+    return dx.astype(x.dtype), dw.astype(kernel.dtype), None
 
 
-def _dispatch_bwd(padding, bwd, res, g):
-    x, kernel = res
+def _dispatch_bwd(padding, bwd, res, g, epi=None):
+    x, kernel, y, bias = res
     if isinstance(bwd, LayerPlan):  # plan-resolved: no cache consult at all
         method, bth, btw = bwd.bwd_method, bwd.bwd_tile_h, bwd.bwd_tile_w
     elif bwd == "auto":
-        method, bth, btw = _resolve_bwd(x, kernel, padding)
+        method, bth, btw = _resolve_bwd(x, kernel, padding, epi)
     elif bwd in BWD_METHODS:
         method, bth, btw = bwd, None, None
     else:
@@ -123,14 +163,27 @@ def _dispatch_bwd(padding, bwd, res, g):
             f"unknown bwd {bwd!r}; one of {BWD_METHODS} or a LayerPlan"
         )
     if method == "pallas":
-        return _pallas_bwd(padding, res, g, tile_h=bth, tile_w=btw)
-    return _lax_bwd(padding, res, g)
+        dx, dw, db = _pallas_bwd(
+            padding, res, g, tile_h=bth, tile_w=btw, epi=epi
+        )
+    else:
+        dx, dw, db = _lax_bwd(padding, res, g, epi=epi)
+    return dx, dw, db
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _epi_residuals(x, kernel, y, epi, bias):
+    """(x, kernel, saved-output-or-None, bias-or-None) — ``y`` is saved only
+    when the epilogue's backward needs it (act != none)."""
+    epi = epilib.canonical(epi)
+    keep_y = y if (epi is not None and epi.saves_output) else None
+    keep_b = bias if (epi is not None and epi.bias) else None
+    return (x, kernel, keep_y, keep_b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
 def transpose_conv2d_pallas(
     x, kernel, padding: int = 0, tile_h: int | None = None,
-    tile_w: int | None = None, bwd: str = "auto",
+    tile_w: int | None = None, bwd: str = "auto", epilogue=None, bias=None,
 ):
     """Phase-fused spatially-tiled Pallas forward, segregated Pallas/lax
     backward.
@@ -140,38 +193,48 @@ def transpose_conv2d_pallas(
     backward implementation: a :class:`~repro.kernels.plan.LayerPlan`
     (plan-resolved backward, no cache consult), "auto" (per-shape tuned
     dispatch, memoized per cache generation), "pallas", or "lax".
+    ``epilogue`` (static) fuses ``+ bias``/activation into the kernel's
+    single output store; ``bias`` is the differentiable (Cout,) vector —
+    its cotangent ``db`` is reduced inside the Pallas dw launch (or the lax
+    closure) rather than by a separate pass.
     """
-    return _pallas_fused_fwd(x, kernel, padding, tile_h=tile_h, tile_w=tile_w)
-
-
-def _fused_fwd(x, kernel, padding, tile_h, tile_w, bwd):
-    return (
-        _pallas_fused_fwd(x, kernel, padding, tile_h=tile_h, tile_w=tile_w),
-        (x, kernel),
+    return _pallas_fused_fwd(
+        x, kernel, padding, tile_h=tile_h, tile_w=tile_w,
+        epilogue=epilogue, bias=bias,
     )
 
 
-def _fused_bwd(padding, tile_h, tile_w, bwd, res, g):
-    return _dispatch_bwd(padding, bwd, res, g)
+def _fused_fwd(x, kernel, padding, tile_h, tile_w, bwd, epilogue, bias):
+    y = _pallas_fused_fwd(
+        x, kernel, padding, tile_h=tile_h, tile_w=tile_w,
+        epilogue=epilogue, bias=bias,
+    )
+    return y, _epi_residuals(x, kernel, y, epilogue, bias)
+
+
+def _fused_bwd(padding, tile_h, tile_w, bwd, epilogue, res, g):
+    return _dispatch_bwd(padding, bwd, res, g, epi=epilogue)
 
 
 transpose_conv2d_pallas.defvjp(_fused_fwd, _fused_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def transpose_conv2d_pallas_phase(
-    x, kernel, padding: int = 0, bwd: str = "auto"
+    x, kernel, padding: int = 0, bwd: str = "auto", epilogue=None, bias=None,
 ):
-    """Legacy per-phase-grid Pallas forward, same dispatched backward."""
-    return _pallas_phase_fwd(x, kernel, padding)
+    """Legacy per-phase-grid Pallas forward, same dispatched backward (and
+    the same fused epilogue — parity with the fused kernel)."""
+    return _pallas_phase_fwd(x, kernel, padding, epilogue=epilogue, bias=bias)
 
 
-def _phase_fwd(x, kernel, padding, bwd):
-    return _pallas_phase_fwd(x, kernel, padding), (x, kernel)
+def _phase_fwd(x, kernel, padding, bwd, epilogue, bias):
+    y = _pallas_phase_fwd(x, kernel, padding, epilogue=epilogue, bias=bias)
+    return y, _epi_residuals(x, kernel, y, epilogue, bias)
 
 
-def _phase_bwd(padding, bwd, res, g):
-    return _dispatch_bwd(padding, bwd, res, g)
+def _phase_bwd(padding, bwd, epilogue, res, g):
+    return _dispatch_bwd(padding, bwd, res, g, epi=epilogue)
 
 
 transpose_conv2d_pallas_phase.defvjp(_phase_fwd, _phase_bwd)

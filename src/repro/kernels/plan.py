@@ -39,6 +39,11 @@ Resolution rules (identical to the dispatch they replace):
 * backward — the tuned ``bwd`` entry (method + dx tiles); cold cache
   defaults to the segregated Pallas backward on a real accelerator backend
   and the lax VJP elsewhere.
+* epilogue — a layer's fused bias+activation tail
+  (:mod:`repro.kernels.epilogue`) is PART of the layer signature: the plan
+  resolves the whole ``act(tconv + b)`` unit, including whether the Pallas
+  kernels run the epilogue in-kernel or as composed post-ops
+  (``fuse_epilogue``, raced by the autotuner since cache schema v3).
 """
 from __future__ import annotations
 
@@ -48,6 +53,8 @@ import functools
 import jax
 
 from repro.core import segregation as seg
+from repro.kernels import epilogue as epilib
+from repro.kernels.epilogue import Epilogue
 
 # forward methods that resolve through plans (everything the autotuner can
 # pick, plus the explicit Pallas spellings)
@@ -68,10 +75,16 @@ class LayerPlan:
     cout: int
     padding: int
     dtype: str = "float32"
+    # elementwise tail of the layer (act(y + b)); None = bare transpose conv
+    epilogue: Epilogue | None = None
     # resolved forward
     method: str = "unified_reshape"
     tile_h: int | None = None     # fused Pallas forward spatial tiles
     tile_w: int | None = None
+    # whether the Pallas kernels run the epilogue in-kernel (fused on the
+    # fp32 accumulator) or the layer composes it as post-ops — the autotuner
+    # races both; lax methods always compose (XLA fuses elementwise tails)
+    fuse_epilogue: bool = True
     # resolved backward
     bwd_method: str = "lax"
     bwd_tile_h: int | None = None  # Pallas dx spatial tiles
@@ -86,10 +99,14 @@ class LayerPlan:
                  if self.tile_h is not None else "")
         btiles = (f"[{self.bwd_tile_h}x{self.bwd_tile_w}]"
                   if self.bwd_tile_h is not None else "")
+        epi = ""
+        if self.epilogue is not None:
+            fused = "fused" if self.fuse_epilogue else "postops"
+            epi = f" epi={self.epilogue.tag()}({fused})"
         return (
             f"{self.n_in}x{self.n_in}x{self.cin}->{self.cout} "
             f"k{self.n_k} p{self.padding} b{self.batch} {self.dtype}: "
-            f"fwd={self.method}{tiles} bwd={self.bwd_method}{btiles} "
+            f"fwd={self.method}{tiles} bwd={self.bwd_method}{btiles}{epi} "
             f"({self.source})"
         )
 
@@ -147,6 +164,7 @@ def _known_fwd(method: str) -> bool:
 def plan_layer(
     b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int,
     dtype: str = "float32", *, method: str = "auto", train: bool = False,
+    epilogue: Epilogue | None = None,
 ) -> LayerPlan:
     """Resolve one layer's dispatch from the autotune cache (or cold rules).
 
@@ -154,14 +172,21 @@ def plan_layer(
     at plan-compile time, never per executed call. ``method="auto"`` follows
     the tuned winner (``step`` in training mode, else ``fwd``); explicit
     methods are pinned but still pick up tuned fused tiles / the tuned
-    backward entry.
+    backward entry. ``epilogue`` is part of the layer signature (cache
+    schema v3): an epilogue'd layer tunes — and resolves — the WHOLE
+    ``act(tconv + b)`` unit, including whether the Pallas kernels fuse the
+    epilogue in-kernel or compose it as post-ops (``fuse_epilogue``).
     """
     from repro.kernels import autotune
 
-    rec = autotune.best_entry(b, n_in, n_k, cin, cout, padding, dtype) or {}
+    epilogue = epilib.canonical(epilogue)
+    rec = autotune.best_entry(
+        b, n_in, n_k, cin, cout, padding, dtype, epilogue=epilogue
+    ) or {}
     fwd = rec.get("fwd") or {}
     source = "cold"
     tile_h = tile_w = None
+    fuse_epi = True  # cold default: the fused epilogue is the point
     if method == "auto":
         entry = (rec.get("step") if train else None) or fwd or None
         if entry is not None and _known_fwd(entry.get("method", "")):
@@ -170,6 +195,9 @@ def plan_layer(
             # entry's tiles when only the fwd direction was tuned
             tile_h = entry.get("tile_h", fwd.get("tile_h"))
             tile_w = entry.get("tile_w", fwd.get("tile_w"))
+            fuse_epi = entry.get(
+                "fuse_epilogue", fwd.get("fuse_epilogue", True)
+            )
             source = "tuned"
         else:
             resolved = _cold_fwd(n_in, n_k, padding)
@@ -179,9 +207,12 @@ def plan_layer(
         resolved = "pallas_fused" if method == "pallas" else method
         if resolved == "pallas_fused" and fwd.get("method") == "pallas_fused":
             tile_h, tile_w = fwd.get("tile_h"), fwd.get("tile_w")
+            fuse_epi = fwd.get("fuse_epilogue", True)
             source = "tuned"  # pinned method, but tiles came from the cache
     if resolved not in ("pallas_fused", "pallas"):
         tile_h = tile_w = None
+    if resolved not in _PALLAS_FWD or epilogue is None:
+        fuse_epi = True  # only meaningful for epilogue'd Pallas layers
 
     bwd = rec.get("bwd")
     if bwd is not None:
@@ -193,7 +224,8 @@ def plan_layer(
 
     return LayerPlan(
         batch=b, n_in=n_in, n_k=n_k, cin=cin, cout=cout, padding=padding,
-        dtype=dtype, method=resolved, tile_h=tile_h, tile_w=tile_w,
+        dtype=dtype, epilogue=epilogue, method=resolved,
+        tile_h=tile_h, tile_w=tile_w, fuse_epilogue=fuse_epi,
         bwd_method=bwd_method, bwd_tile_h=bwd_tile_h, bwd_tile_w=bwd_tile_w,
         source=source,
     )
@@ -201,17 +233,19 @@ def plan_layer(
 
 @functools.lru_cache(maxsize=None)
 def _plan_layer_cached(
-    b, n_in, n_k, cin, cout, padding, dtype, method, train, epoch
+    b, n_in, n_k, cin, cout, padding, dtype, method, train, epilogue, epoch
 ) -> LayerPlan:
     del epoch  # part of the memo key only: new cache generation -> new entry
     return plan_layer(
-        b, n_in, n_k, cin, cout, padding, dtype, method=method, train=train
+        b, n_in, n_k, cin, cout, padding, dtype, method=method, train=train,
+        epilogue=epilogue,
     )
 
 
 def plan_layer_cached(
     b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int,
     dtype: str = "float32", *, method: str = "auto", train: bool = False,
+    epilogue: Epilogue | None = None,
 ) -> LayerPlan:
     """Memoized :func:`plan_layer`, keyed by (signature, cache generation).
 
@@ -225,12 +259,12 @@ def plan_layer_cached(
 
     return _plan_layer_cached(
         b, n_in, n_k, cin, cout, padding, dtype, method, train,
-        autotune.generation(),
+        epilib.canonical(epilogue), autotune.generation(),
     )
 
 
 def compile_plan(cfg, batch: int, dtype="float32", *, train: bool = False,
-                 method: str = "auto") -> TconvPlan:
+                 method: str = "auto", epilogues=None) -> TconvPlan:
     """Compile a whole-generator :class:`TconvPlan` from the autotune cache.
 
     ``cfg`` is a GAN config (anything with ``layers`` as ``(input_hw, cin,
@@ -238,21 +272,42 @@ def compile_plan(cfg, batch: int, dtype="float32", *, train: bool = False,
     after tuning and before tracing; thread the result through
     ``generator_apply(plan=...)`` / the train step. Retuning requires an
     explicit recompile — compiled plans are immutable by design.
+
+    ``epilogues`` is an optional per-layer tuple of
+    :class:`~repro.kernels.epilogue.Epilogue` (or None entries) baking each
+    layer's bias+activation tail into its plan —
+    :func:`repro.models.gan.generator_plan` derives the generator's
+    (bias+relu ... bias+tanh) stack automatically.
     """
     import jax.numpy as jnp
 
     dt = str(jnp.dtype(dtype))
+    if epilogues is None:
+        epilogues = (None,) * len(cfg.layers)
+    if len(epilogues) != len(cfg.layers):
+        raise ValueError(
+            f"epilogues has {len(epilogues)} entries for "
+            f"{len(cfg.layers)} layers"
+        )
     layers = tuple(
         plan_layer(batch, hw, cfg.kernel, cin, cout, cfg.padding, dt,
-                   method=method, train=train)
-        for hw, cin, cout in cfg.layers
+                   method=method, train=train, epilogue=epi)
+        for (hw, cin, cout), epi in zip(cfg.layers, epilogues)
     )
     return TconvPlan(name=getattr(cfg, "name", "tconv"), layers=layers)
 
 
-def execute_layer(lp: LayerPlan, x, kernel, *, precision=None):
+def execute_layer(lp: LayerPlan, x, kernel, *, bias=None, precision=None):
     """Run one resolved layer. Runs at TRACE time only (the plan is a static
-    jit key); no cache consult or backward re-resolution happens here."""
+    jit key); no cache consult or backward re-resolution happens here.
+
+    Epilogue'd plans execute the WHOLE layer ``act(tconv + b)``: Pallas
+    methods fuse the epilogue in-kernel when the plan says so
+    (``fuse_epilogue``, the backward then flows through the fused
+    ``g·act'(y)`` prologue + dual dw/db accumulator); lax methods compose
+    the identical :meth:`Epilogue.apply` post-ops, so every method stays
+    numerically interchangeable.
+    """
     if (x.shape[1], kernel.shape[0], kernel.shape[2], kernel.shape[3]) != (
         lp.n_in, lp.n_k, lp.cin, lp.cout
     ) or str(x.dtype) != lp.dtype:
@@ -260,19 +315,36 @@ def execute_layer(lp: LayerPlan, x, kernel, *, precision=None):
             f"LayerPlan mismatch: plan is for {lp.describe()!r}, got input "
             f"{x.shape}/{x.dtype} kernel {kernel.shape}"
         )
-    if lp.method == "pallas_phase":
-        from repro.kernels import ops
-
-        return ops.transpose_conv2d_pallas_phase(x, kernel, lp.padding, lp)
-    if lp.method in ("pallas", "pallas_fused"):
-        from repro.kernels import ops
-
-        return ops.transpose_conv2d_pallas(
-            x, kernel, lp.padding, lp.tile_h, lp.tile_w, lp
+    epi = lp.epilogue
+    if (epi is not None and epi.bias) != (bias is not None):
+        raise ValueError(
+            f"LayerPlan epilogue mismatch: plan is for {lp.describe()!r}, "
+            f"got bias={'set' if bias is not None else None}"
         )
+    if lp.method in _PALLAS_FWD:
+        from repro.kernels import ops
+
+        fuse = epi is not None and lp.fuse_epilogue
+        kernel_epi = epi if fuse else None
+        kernel_bias = bias if fuse else None
+        if lp.method == "pallas_phase":
+            y = ops.transpose_conv2d_pallas_phase(
+                x, kernel, lp.padding, lp, kernel_epi, kernel_bias
+            )
+        else:
+            y = ops.transpose_conv2d_pallas(
+                x, kernel, lp.padding, lp.tile_h, lp.tile_w, lp,
+                kernel_epi, kernel_bias,
+            )
+        if epi is not None and not fuse:
+            y = epi.apply(y, bias)
+        return y
     from repro.core import transpose_conv as tc
 
     fn = tc.METHODS.get(lp.method)
     if fn is None or fn is tc.transpose_conv_auto:
         raise ValueError(f"LayerPlan resolved to unknown method {lp.method!r}")
-    return fn(x, kernel, lp.padding, precision=precision)
+    y = fn(x, kernel, lp.padding, precision=precision)
+    if epi is not None:
+        y = epi.apply(y, bias)
+    return y

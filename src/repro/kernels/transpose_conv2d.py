@@ -65,6 +65,7 @@ except ImportError:  # pragma: no cover - non-TPU builds of pallas
     pltpu = None
 
 from repro.core import segregation as seg
+from repro.kernels import epilogue as epilib
 
 
 def _phase_offsets(n_in: int, n_k: int, padding: int):
@@ -91,9 +92,19 @@ def default_tiles(n_in: int, n_k: int, padding: int, cin: int, cout: int):
     return min(hp, 8), min(hp, 128), min(cout, 128), min(cin, 512)
 
 
-def _fused_kernel(x_ref, w_ref, o_ref, *, R, th, tw, roffs, coffs, wsels):
+def _fused_kernel(x_ref, w_ref, *rest, R, th, tw, roffs, coffs, wsels, epi):
     """One (batch, h_tile, w_tile, cout_tile, cin_tile) grid step: all four
-    phase accumulations from a single halo'd input tile."""
+    phase accumulations from a single halo'd input tile.
+
+    ``rest`` is ``(b_ref, o_ref)`` when the epilogue carries a bias (the
+    bias BlockSpec is broadcast: its index map depends on the cout grid axis
+    only) and ``(o_ref,)`` otherwise. The epilogue — ``+ bias`` then the
+    activation — is applied on the fp32 accumulator at the LAST cin step,
+    before the block leaves VMEM: the output map is still touched exactly
+    once in HBM.
+    """
+    b_ref = rest[0] if epi is not None and epi.bias else None
+    o_ref = rest[-1]
     ci = pl.program_id(4)
     x = x_ref[0]  # (th + dr + R - 1, tw + dc + R - 1, ci) VMEM tile
     ct = o_ref.shape[-1]
@@ -123,11 +134,20 @@ def _fused_kernel(x_ref, w_ref, o_ref, *, R, th, tw, roffs, coffs, wsels):
 
     o_ref[...] += block
 
+    if epi is not None:
+        @pl.when(ci == pl.num_programs(4) - 1)
+        def _epilogue():
+            y = o_ref[...]
+            if b_ref is not None:
+                y = y + b_ref[0]  # (ct,) fp32, broadcast over the block
+            o_ref[...] = epi.apply_act(y)
+
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "padding", "tile_h", "tile_w", "cout_tile", "cin_tile", "interpret",
+        "epilogue",
     ),
 )
 def transpose_conv2d_pallas(
@@ -140,15 +160,26 @@ def transpose_conv2d_pallas(
     cout_tile: int | None = None,
     cin_tile: int | None = None,
     interpret: bool | None = None,
+    epilogue=None,
+    bias: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Phase-fused, spatially-tiled unified transpose conv (single launch).
 
     x: (B, N, N, Cin) NHWC; kernel: (n, n, Cin, Cout) HWIO. Returns
     (B, M, M, Cout) with M = 2N - n + 2*padding, fp32 (inputs may be bf16;
-    accumulation is fp32 either way).
+    accumulation is fp32 either way). ``epilogue`` (an
+    :class:`repro.kernels.epilogue.Epilogue`, static) fuses ``+ bias`` and
+    the activation onto the fp32 accumulator before the single store —
+    ``bias`` is the (Cout,) vector, required iff ``epilogue.bias``.
     """
     if interpret is None:  # interpret=True on CPU so tests/benches run anywhere
         interpret = jax.default_backend() == "cpu"
+    epi = epilib.canonical(epilogue)
+    if (epi is not None and epi.bias) != (bias is not None):
+        raise ValueError(
+            f"epilogue {epi.tag() if epi else None!r} and "
+            f"bias={'set' if bias is not None else None} disagree"
+        )
     b, n_in, _, cin = x.shape
     n_k = kernel.shape[0]
     cout = kernel.shape[3]
@@ -199,29 +230,39 @@ def transpose_conv2d_pallas(
                     "arbitrary",
                 ),
             )
+    in_specs = [
+        # halo'd spatial tile: overlapping windows -> Unblocked indexing
+        # (index map returns ELEMENT offsets, not block indices)
+        pl.BlockSpec(
+            (1, th + dr + R - 1, tw + dc + R - 1, ci),
+            lambda bb, ih, iw, co, cc: (
+                bb, base_r + ih * th, base_c + iw * tw, cc * ci
+            ),
+            indexing_mode=pl.unblocked,
+        ),
+        pl.BlockSpec(
+            (4, R, R, ci, ct),
+            lambda bb, ih, iw, co, cc: (0, 0, 0, cc, co),
+        ),
+    ]
+    operands = [xp, w]
+    if epi is not None and epi.bias:
+        # broadcast bias: ONE (1, ct) block per cout tile — the index map
+        # ignores the batch/spatial/cin grid axes, so the vector is never
+        # re-tiled per grid step
+        in_specs.append(
+            pl.BlockSpec((1, ct), lambda bb, ih, iw, co, cc: (0, co))
+        )
+        operands.append(bias.reshape(1, cout).astype(jnp.float32))
     out = pl.pallas_call(
         functools.partial(
             _fused_kernel, R=R, th=th, tw=tw,
             roffs=tuple(r - base_r for r in row0s),
             coffs=tuple(c - base_c for c in col0s),
-            wsels=wsels,
+            wsels=wsels, epi=epi,
         ),
         grid=grid,
-        in_specs=[
-            # halo'd spatial tile: overlapping windows -> Unblocked indexing
-            # (index map returns ELEMENT offsets, not block indices)
-            pl.BlockSpec(
-                (1, th + dr + R - 1, tw + dc + R - 1, ci),
-                lambda bb, ih, iw, co, cc: (
-                    bb, base_r + ih * th, base_c + iw * tw, cc * ci
-                ),
-                indexing_mode=pl.unblocked,
-            ),
-            pl.BlockSpec(
-                (4, R, R, ci, ct),
-                lambda bb, ih, iw, co, cc: (0, 0, 0, cc, co),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, th, 2, tw, 2, ct),
             lambda bb, ih, iw, co, cc: (bb, ih, 0, iw, 0, co),
@@ -229,7 +270,7 @@ def transpose_conv2d_pallas(
         out_shape=jax.ShapeDtypeStruct((b, hp, 2, wp, 2, cout), jnp.float32),
         compiler_params=compiler_params,
         interpret=interpret,
-    )(xp, w)
+    )(*operands)
     return out.reshape(b, 2 * hp, 2 * wp, cout)[:, :m, :m, :]
 
 
@@ -240,8 +281,10 @@ def transpose_conv2d_pallas(
 # candidate ("pallas_phase") and as the perf reference for benchmarks.
 # --------------------------------------------------------------------------
 
-def _phase_kernel(x_ref, w_ref, o_ref, *, R, Hp, Wp, row0s, col0s):
+def _phase_kernel(x_ref, w_ref, *rest, R, Hp, Wp, row0s, col0s, epi):
     """One (batch, phase, cout-tile, cin-tile) grid step."""
+    b_ref = rest[0] if epi is not None and epi.bias else None
+    o_ref = rest[-1]
     ph = pl.program_id(1)
     ci = pl.program_id(3)
     pr, pc = ph // 2, ph % 2
@@ -269,9 +312,20 @@ def _phase_kernel(x_ref, w_ref, o_ref, *, R, Hp, Wp, row0s, col0s):
 
     o_ref[...] += acc
 
+    if epi is not None:
+        @pl.when(ci == pl.num_programs(3) - 1)
+        def _epilogue():
+            y = o_ref[...]
+            if b_ref is not None:
+                y = y + b_ref[0]
+            o_ref[...] = epi.apply_act(y)
+
 
 @functools.partial(
-    jax.jit, static_argnames=("padding", "cout_tile", "cin_tile", "interpret")
+    jax.jit,
+    static_argnames=(
+        "padding", "cout_tile", "cin_tile", "interpret", "epilogue",
+    ),
 )
 def transpose_conv2d_pallas_phase(
     x: jnp.ndarray,
@@ -281,10 +335,23 @@ def transpose_conv2d_pallas_phase(
     cout_tile: int | None = None,
     cin_tile: int | None = None,
     interpret: bool | None = None,
+    epilogue=None,
+    bias: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
-    """Per-phase unified kernel-segregated transpose conv (legacy grid)."""
+    """Per-phase unified kernel-segregated transpose conv (legacy grid).
+
+    Takes the same fused ``epilogue``/``bias`` as the fused kernel (parity:
+    both Pallas forwards execute whole layers, so the autotuner races them
+    on equal terms).
+    """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    epi = epilib.canonical(epilogue)
+    if (epi is not None and epi.bias) != (bias is not None):
+        raise ValueError(
+            f"epilogue {epi.tag() if epi else None!r} and "
+            f"bias={'set' if bias is not None else None} disagree"
+        )
     b, n_in, _, cin = x.shape
     n_k = kernel.shape[0]
     cout = kernel.shape[3]
@@ -306,29 +373,37 @@ def transpose_conv2d_pallas_phase(
         raise ValueError(f"cout={cout} % {ct} or cin={cin} % {ci} != 0")
 
     grid = (b, 4, cout // ct, cin // ci)
+    in_specs = [
+        pl.BlockSpec(
+            (1, np_, np_, ci), lambda bb, ph, co, cc: (bb, 0, 0, cc)
+        ),
+        pl.BlockSpec(
+            (1, R, R, ci, ct),
+            # the paper's "runtime sub-kernel selection": phase parity
+            # (+ odd-padding swap) picks the stacked sub-kernel block
+            lambda bb, ph, co, cc, _p=padding: (
+                ((ph // 2 + _p) % 2) * 2 + (ph % 2 + _p) % 2, 0, 0, cc, co
+            ),
+        ),
+    ]
+    operands = [xp, w]
+    if epi is not None and epi.bias:
+        in_specs.append(
+            pl.BlockSpec((1, ct), lambda bb, ph, co, cc: (0, co))
+        )
+        operands.append(bias.reshape(1, cout).astype(jnp.float32))
     out = pl.pallas_call(
         functools.partial(
             _phase_kernel, R=R, Hp=Hp, Wp=Wp, row0s=row0s, col0s=col0s,
+            epi=epi,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(
-                (1, np_, np_, ci), lambda bb, ph, co, cc: (bb, 0, 0, cc)
-            ),
-            pl.BlockSpec(
-                (1, R, R, ci, ct),
-                # the paper's "runtime sub-kernel selection": phase parity
-                # (+ odd-padding swap) picks the stacked sub-kernel block
-                lambda bb, ph, co, cc, _p=padding: (
-                    ((ph // 2 + _p) % 2) * 2 + (ph % 2 + _p) % 2, 0, 0, cc, co
-                ),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, Hp, 1, Wp, 1, ct),
             lambda bb, ph, co, cc: (bb, 0, ph // 2, 0, ph % 2, co),
         ),
         out_shape=jax.ShapeDtypeStruct((b, Hp, 2, Wp, 2, cout), jnp.float32),
         interpret=interpret,
-    )(xp, w)
+    )(*operands)
     return out.reshape(b, 2 * Hp, 2 * Wp, cout)[:, :m, :m, :]

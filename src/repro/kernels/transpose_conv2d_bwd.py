@@ -45,6 +45,17 @@ the host) and accumulate in fp32 via ``preferred_element_type`` — the
 bf16-in/fp32-accum discipline of the forward. Both are validated on CPU in
 interpret mode against the lax VJP of ``transpose_conv_unified``
 (tests/test_bwd_kernel.py).
+
+Fused-epilogue layers (``act(tconv + b)``, :mod:`repro.kernels.epilogue`)
+enter through :func:`transpose_conv2d_bwd_pallas` with the epilogue and the
+saved forward output ``y``: a small fused Pallas prologue
+(:func:`epilogue_grad_pallas`) computes the masked cotangent
+``gm = g · act'(y)`` in one elementwise pass (``act'`` is never
+materialized separately), the dx/dw kernels consume the pre-masked ``gm``
+unchanged, and the dw grid's second grid-carried accumulator reduces the
+bias gradient ``db = Σ_{b,space} gm`` in the same launch
+(``with_db=True`` — the parity-plane tiles are already in VMEM, so db is
+HBM-free).
 """
 from __future__ import annotations
 
@@ -61,6 +72,7 @@ except ImportError:  # pragma: no cover - non-TPU builds of pallas
     pltpu = None
 
 from repro.core import segregation as seg
+from repro.kernels import epilogue as epilib
 from repro.kernels.transpose_conv2d import _phase_offsets
 
 
@@ -132,6 +144,63 @@ def default_dw_tile(n_in: int, n_k: int, padding: int) -> int:
     """Default phase-plane row tile of the dw reduction kernel."""
     m = seg.output_size(n_in, n_k, padding)
     return min((m + 1) // 2, 8)
+
+
+# ------------------------------------------------------- epilogue prologue
+
+def _epilogue_grad_kernel(g_ref, y_ref, o_ref, *, epi):
+    """One (batch, row_tile) grid step: ``gm = g * act'(y)`` elementwise."""
+    o_ref[...] = epi.grad_from_y(g_ref[...], y_ref[...])
+
+
+def epilogue_grad_pallas(
+    g: jnp.ndarray,
+    y: jnp.ndarray,
+    epilogue,
+    *,
+    tile_m: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused backward prologue of the layer epilogue: ``g · act'(y)``.
+
+    ``g`` is the cotangent of the POST-activation output; ``y`` the saved
+    forward output (the residual — the VJP saves ``y`` instead of
+    recomputing the pre-activation, see :mod:`repro.kernels.epilogue`).
+    One fused elementwise pass: ``act'`` is never materialized separately,
+    so the masked cotangent costs one read of ``y`` on top of the read of
+    ``g`` the downstream dx/dw kernels do anyway. Identity / bias-only
+    epilogues pass ``g`` through untouched (no launch at all).
+    """
+    epi = epilib.canonical(epilogue)
+    if epi is None or not epi.saves_output:
+        return g
+    return _epilogue_grad_call(g, y, epi, tile_m=tile_m, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("epi", "tile_m", "interpret")
+)
+def _epilogue_grad_call(g, y, epi, *, tile_m=None, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, m, mw, c = g.shape
+    tm = min(tile_m or 8, m)
+    n_t = pl.cdiv(m, tm)
+    if m % tm:  # zero-pad rows so every tile is full (cropped below)
+        pad = ((0, 0), (0, n_t * tm - m), (0, 0), (0, 0))
+        g = jnp.pad(g, pad)
+        y = jnp.pad(y, pad)
+    spec = pl.BlockSpec((1, tm, mw, c), lambda bb, it: (bb, it, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(_epilogue_grad_kernel, epi=epi),
+        grid=(b, n_t),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+        compiler_params=_compiler_params(("parallel", "parallel")),
+        interpret=interpret,
+    )(g, y)
+    return out[:, :m]
 
 
 # ------------------------------------------------------------------ dx
@@ -271,17 +340,41 @@ def transpose_conv2d_dx_pallas(
 
 # ------------------------------------------------------------------ dw
 
-def _dw_kernel(x_ref, g_ref, o_ref, *, R, th, wp, roffs, coffs, wsels):
-    """One (cin_tile, cout_tile, batch, h_tile) grid step: every (phase,
+def _dw_kernel(x_ref, g_ref, *out_refs, R, th, wp, roffs, coffs, wsels,
+               with_db):
+    """One (cout_tile, cin_tile, batch, h_tile) grid step: every (phase,
     p, q) tap contracts the tile's spatial axis into the stacked sub-kernel
-    gradient, accumulated across the trailing (batch, h_tile) grid axes."""
+    gradient, accumulated across the trailing (cin_tile, batch, h_tile)
+    grid axes.
+
+    ``with_db``: a second ``(1, cout_tile)`` output accumulates
+    ``db = sum_{b,space} g`` in the SAME pass — the parity-plane tiles are
+    already in VMEM for the dw taps, so the bias gradient costs zero extra
+    HBM reads. The db block is revisited by every (cin, batch, h) step but
+    only accumulated on the first cin tile (g doesn't depend on cin).
+    """
+    o_ref = out_refs[0]
+    ci = pl.program_id(1)
     bi = pl.program_id(2)
     ih = pl.program_id(3)
     x = x_ref[0]  # (th + dr + R - 1, wp + dc + R - 1, cin_tile)
 
+    # the dw block is per (cout_tile, cin_tile): first visit is (bi, ih) == 0
     @pl.when((bi == 0) & (ih == 0))
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
+
+    if with_db:
+        db_ref = out_refs[1]
+
+        @pl.when((ci == 0) & (bi == 0) & (ih == 0))
+        def _init_db():
+            db_ref[...] = jnp.zeros_like(db_ref)
+
+        @pl.when(ci == 0)  # g is cin-independent: reduce it once
+        def _acc_db():
+            gall = g_ref[:, 0]  # (4, th, wp, cout_tile)
+            db_ref[...] += gall.astype(jnp.float32).sum((0, 1, 2))[None]
 
     for ph in range(4):
         pr, pc = ph // 2, ph % 2
@@ -304,6 +397,7 @@ def _dw_kernel(x_ref, g_ref, o_ref, *, R, th, wp, roffs, coffs, wsels):
     jax.jit,
     static_argnames=(
         "n_k", "padding", "tile_h", "cin_tile", "cout_tile", "interpret",
+        "with_db",
     ),
 )
 def transpose_conv2d_dw_pallas(
@@ -316,12 +410,18 @@ def transpose_conv2d_dw_pallas(
     cin_tile: int | None = None,
     cout_tile: int | None = None,
     interpret: bool | None = None,
-) -> jnp.ndarray:
+    with_db: bool = False,
+):
     """Weight gradient of the unified transpose conv as one Pallas launch.
 
     x: (B, N, N, Cin) primal input; g: (B, M, M, Cout) cotangent. Returns
     dw (n_k, n_k, Cin, Cout), fp32, assembled from the per-parity stacked
     gradient (zero-padded stack taps are sliced away before the merge).
+
+    ``with_db=True`` additionally reduces the bias gradient
+    ``db = sum_{b,space} g`` (Cout,) in the same launch via a second
+    grid-carried accumulator — the epilogue'd VJP's dw/db pass — and
+    returns ``(dw, db)``.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -361,39 +461,58 @@ def transpose_conv2d_dw_pallas(
     if cin % ci_t or cout % co_t:
         raise ValueError(f"cin={cin} % {ci_t} or cout={cout} % {co_t} != 0")
 
-    grid = (cin // ci_t, cout // co_t, b, n_h)
-    stack = pl.pallas_call(
+    # grid (cout_tile, cin_tile, batch, h_tile): only the leading cout axis
+    # is parallel — the db accumulator block is revisited across the cin
+    # axis (it accumulates only on the first cin tile), so cin joins
+    # (batch, h_tile) as a sequential axis
+    grid = (cout // co_t, cin // ci_t, b, n_h)
+    out_specs = [
+        # grid-carried accumulator: one block per (cout, cin) tile,
+        # revisited by every (batch, h_tile) step
+        pl.BlockSpec(
+            (4, R, R, ci_t, co_t),
+            lambda oc, cc, bb, ih: (0, 0, 0, cc, oc),
+        ),
+    ]
+    out_shape = [jax.ShapeDtypeStruct((4, R, R, cin, cout), jnp.float32)]
+    if with_db:
+        # db accumulator: ONE (1, co_t) block per cout tile, revisited by
+        # every (cin, batch, h_tile) step
+        out_specs.append(
+            pl.BlockSpec((1, co_t), lambda oc, cc, bb, ih: (0, oc))
+        )
+        out_shape.append(jax.ShapeDtypeStruct((1, cout), jnp.float32))
+    outs = pl.pallas_call(
         functools.partial(
             _dw_kernel, R=R, th=th, wp=wp,
             roffs=tuple(r - base_r for r in row0s),
             coffs=tuple(c - base_c for c in col0s),
-            wsels=_wsels(padding),
+            wsels=_wsels(padding), with_db=with_db,
         ),
         grid=grid,
         in_specs=[
             # the forward's halo'd input tile (Unblocked element offsets)
             pl.BlockSpec(
                 (1, th + dr + R - 1, wp + dc + R - 1, ci_t),
-                lambda cc, oc, bb, ih: (bb, base_r + ih * th, base_c, cc * ci_t),
+                lambda oc, cc, bb, ih: (bb, base_r + ih * th, base_c, cc * ci_t),
                 indexing_mode=pl.unblocked,
             ),
             pl.BlockSpec(
                 (4, 1, th, wp, co_t),
-                lambda cc, oc, bb, ih: (0, bb, ih, 0, oc),
+                lambda oc, cc, bb, ih: (0, bb, ih, 0, oc),
             ),
         ],
-        # grid-carried accumulator: one block per (cin, cout) tile, revisited
-        # by every (batch, h_tile) step
-        out_specs=pl.BlockSpec(
-            (4, R, R, ci_t, co_t),
-            lambda cc, oc, bb, ih: (0, 0, 0, cc, oc),
-        ),
-        out_shape=jax.ShapeDtypeStruct((4, R, R, cin, cout), jnp.float32),
+        out_specs=out_specs if with_db else out_specs[0],
+        out_shape=tuple(out_shape) if with_db else out_shape[0],
+        # only the db accumulator is revisited across the cin axis; without
+        # it the cin tiles stay parallel exactly as before
         compiler_params=_compiler_params(
-            ("parallel", "parallel", "arbitrary", "arbitrary")
+            ("parallel", "arbitrary" if with_db else "parallel",
+             "arbitrary", "arbitrary")
         ),
         interpret=interpret,
     )(xp, gz)
+    stack = outs[0] if with_db else outs
 
     # stacked (4, R, R, Cin, Cout) -> (n, n, Cin, Cout): slice each
     # sub-kernel gradient to its true extent (dropping the zero-pad taps'
@@ -403,7 +522,10 @@ def transpose_conv2d_dw_pallas(
         for s in range(2):
             rr, cc = seg.subkernel_shape(n_k, r, s)
             subs.append(stack[2 * r + s, :rr, :cc])
-    return seg.merge_subkernels(seg.SubKernels(*subs), n_k)
+    dw = seg.merge_subkernels(seg.SubKernels(*subs), n_k)
+    if with_db:
+        return dw, outs[1][0]
+    return dw
 
 
 def transpose_conv2d_bwd_pallas(
@@ -416,18 +538,39 @@ def transpose_conv2d_bwd_pallas(
     tile_w: int | None = None,
     dw_tile_h: int | None = None,
     interpret: bool | None = None,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Full segregated Pallas backward: (dx, dw) for one forward call.
+    epilogue=None,
+    y: jnp.ndarray | None = None,
+):
+    """Full segregated Pallas backward: (dx, dw[, db]) for one forward call.
 
     ``tile_h``/``tile_w`` pin the dx kernel's spatial tiling (e.g. the
     autotuner's measured winner); ``dw_tile_h`` pins the dw reduction tile.
     Gradients come back in fp32 (callers cast to the primal dtypes).
+
+    ``epilogue`` is the layer's fused :class:`~repro.kernels.epilogue
+    .Epilogue`: the cotangent is first masked by the fused Pallas prologue
+    ``gm = g · act'(y)`` (``y`` = the saved forward output, required iff the
+    epilogue has an activation), then the dx/dw kernels consume the
+    PRE-masked ``gm``. With ``epilogue.bias`` the dw pass also reduces
+    ``db`` (same launch) and the return grows to ``(dx, dw, db)``.
     """
+    epi = epilib.canonical(epilogue)
+    if epi is not None and epi.saves_output:
+        if y is None:
+            raise ValueError(
+                f"epilogue {epi.tag()!r} backward needs the saved output y"
+            )
+        g = epilogue_grad_pallas(g, y, epi, interpret=interpret)
     dx = transpose_conv2d_dx_pallas(
         g, kernel, x.shape[1], padding,
         tile_h=tile_h, tile_w=tile_w, interpret=interpret,
     )
+    with_db = epi is not None and epi.bias
     dw = transpose_conv2d_dw_pallas(
         x, g, kernel.shape[0], padding, tile_h=dw_tile_h, interpret=interpret,
+        with_db=with_db,
     )
+    if with_db:
+        dw, db = dw
+        return dx, dw, db
     return dx, dw

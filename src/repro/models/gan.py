@@ -14,7 +14,8 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.core.segregation import flop_count, memory_savings_bytes
+from repro.core.segregation import flop_count, memory_savings_bytes, output_size
+from repro.kernels.epilogue import Epilogue
 from repro.models.layers import tconv_apply, tconv_init
 
 
@@ -54,15 +55,39 @@ EBGAN = GANConfig(
 GAN_ZOO = {g.name: g for g in (DCGAN, ARTGAN, GPGAN, EBGAN)}
 
 
+def generator_act(cfg: GANConfig, i: int) -> str:
+    """Activation of generator layer ``i``: relu mid-stack, tanh output."""
+    return "tanh" if i == len(cfg.layers) - 1 else "relu"
+
+
+def generator_epilogues(cfg: GANConfig) -> tuple:
+    """Per-layer fused epilogues of a generator stack: every transpose conv
+    adds its bias, mid-stack layers relu, the output layer tanh."""
+    return tuple(
+        Epilogue(bias=True, act=generator_act(cfg, i))
+        for i in range(len(cfg.layers))
+    )
+
+
 def generator_plan(cfg: GANConfig, batch: int, *, dtype=jnp.float32,
-                   train: bool = False, method: str = "auto"):
+                   train: bool = False, method: str = "auto",
+                   epilogues=None):
     """Compile the whole generator's :class:`~repro.kernels.plan.TconvPlan`
     once (autotune-cache winners + cold-cache napkin rule). Thread the
     result through ``generator_apply(plan=...)`` / the train step; retuning
-    requires an explicit recompile."""
+    requires an explicit recompile.
+
+    Each layer's plan bakes in its fused bias+activation epilogue
+    (:func:`generator_epilogues`) by default, so the compiled generator
+    executes whole ``act(tconv + b)`` layers — pass
+    ``epilogues=(None,) * len(cfg.layers)`` to compile a post-op-style
+    plan instead."""
     from repro.kernels.plan import compile_plan
 
-    return compile_plan(cfg, batch, dtype, train=train, method=method)
+    if epilogues is None:
+        epilogues = generator_epilogues(cfg)
+    return compile_plan(cfg, batch, dtype, train=train, method=method,
+                        epilogues=epilogues)
 
 
 def generator_init(key, cfg: GANConfig):
@@ -97,6 +122,12 @@ def generator_apply(params, cfg: GANConfig, z, *, method: str = "auto",
     the Pallas layers' custom VJP to its tuned backward) — what the
     training examples and Table-4 train benchmarks pass when the
     generator sits under ``jax.grad``.
+
+    Each layer's bias + activation route through its plan's fused epilogue
+    (:func:`generator_epilogues`) rather than post-ops — the output map of
+    every transpose conv is touched exactly once per layer, forward and
+    backward. Plans compiled without epilogues keep working (their layers
+    fall back to post-ops inside :func:`~repro.models.layers.tconv_apply`).
     """
     if plan is not None and len(plan) != len(cfg.layers):
         raise ValueError(
@@ -110,29 +141,55 @@ def generator_apply(params, cfg: GANConfig, z, *, method: str = "auto",
         x = tconv_apply(
             params[f"tconv{i}"], x, cfg.padding, method=method, train=train,
             plan=plan[i] if plan is not None else None,
+            act=generator_act(cfg, i),
         )
-        x = jnp.tanh(x) if i == n - 1 else jax.nn.relu(x)
     return x
 
 
-def generator_flops(cfg: GANConfig, *, method: str) -> int:
-    """Analytic MAC count across the stack (paper's FLOP-reduction metric)."""
+def generator_flops(cfg: GANConfig, *, method: str,
+                    include_epilogue: bool = True) -> int:
+    """Analytic op count across the stack (paper's FLOP-reduction metric).
+
+    ``include_epilogue=True`` (default) also counts the layers' elementwise
+    epilogue work — one bias-add and one activation op per output element —
+    so benchmark FLOP denominators match what the fused kernels actually
+    execute. ``include_epilogue=False`` gives the bare transpose-conv MAC
+    count (the paper's 4x-reduction algebra)."""
     total = 0
-    for hw, cin, cout in cfg.layers:
-        total += flop_count(hw, cfg.kernel, cin, cout, cfg.padding, method=method)
+    for i, (hw, cin, cout) in enumerate(cfg.layers):
+        total += flop_count(hw, cfg.kernel, cin, cout, cfg.padding,
+                            method=method)
+        if include_epilogue:
+            m = output_size(hw, cfg.kernel, cfg.padding)
+            # + bias and one activation op per output element
+            total += 2 * m * m * cout
     return total
 
 
-def generator_memory_savings(cfg: GANConfig) -> int:
-    """Bytes of upsampled-buffer traffic the unified method avoids (Table 4).
+def generator_memory_savings(cfg: GANConfig, *,
+                             include_epilogue: bool = False) -> int:
+    """Bytes of avoidable traffic the unified method eliminates (Table 4).
 
     The paper's Table 4 counts the entire padded upsampled buffer
     (2N-1+2P)^2 * C * 4 as savings (mode="buffer"); its Tables 2-3 count the
-    difference vs the padded input (mode="diff")."""
-    return sum(
+    difference vs the padded input (mode="diff").
+
+    ``include_epilogue=True`` additionally counts the post-op intermediates
+    the fused epilogue eliminates: running ``+ bias`` and the activation as
+    separate passes re-reads and re-writes the (M, M, Cout) fp32 output map
+    twice per layer (2 extra reads + 2 extra writes = 4·M²·Cout·4 bytes);
+    the in-kernel epilogue stores the finished map once. Defaults to False
+    — the bare figure is the paper's Table-4 number (the EB-GAN ~35 MB
+    golden)."""
+    total = sum(
         memory_savings_bytes(hw, cin, 4, cfg.padding, mode="buffer")
         for hw, cin, _ in cfg.layers
     )
+    if include_epilogue:
+        for hw, _, cout in cfg.layers:
+            m = output_size(hw, cfg.kernel, cfg.padding)
+            total += 4 * m * m * cout * 4
+    return total
 
 
 # ------------------------------------------------------- small discriminator

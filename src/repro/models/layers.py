@@ -298,12 +298,22 @@ def tconv_init(key, n, cin, cout, *, dtype=jnp.float32):
 
 
 def tconv_apply(p, x, padding: int, *, method: str = "auto",
-                train: bool = False, plan=None):
-    """Stride-2 transpose convolution through the dispatch layer.
+                train: bool = False, plan=None, act: str = "none"):
+    """Stride-2 transpose convolution + bias + activation, through the
+    dispatch layer as ONE fused unit.
+
+    The layer's ``+ bias`` and ``act`` route through the plan's epilogue
+    (:mod:`repro.kernels.epilogue`) instead of post-ops: the Pallas
+    kernels apply them on the fp32 accumulator before the single output
+    store (and the backward runs the fused ``g·act'(y)`` prologue + the
+    in-launch ``db`` reduction), lax methods compose the identical
+    elementwise tail.
 
     ``plan=`` (a compiled :class:`repro.kernels.plan.LayerPlan`) is the
     compile-once path: the layer runs exactly what the plan resolved — no
-    autotune-cache consult per call, and jit keys on the plan value.
+    autotune-cache consult per call, and jit keys on the plan value. A
+    plan compiled WITHOUT an epilogue (pre-epilogue callers) still works:
+    the bias/activation fall back to post-ops around the planned conv.
     Without a plan, method="auto" builds (and memoizes per cache
     generation) a single-layer plan from the persistent autotuner cache —
     GAN training and the Table-4 benchmarks run on whatever operator
@@ -315,10 +325,18 @@ def tconv_apply(p, x, padding: int, *, method: str = "auto",
     ``python -m repro.kernels.autotune --train``).
     """
     from repro.core import transpose_conv2d
+    from repro.kernels import epilogue as epilib
 
+    if plan is not None and plan.epilogue is None:
+        # legacy plan without a baked-in epilogue: planned conv + post-ops
+        y = transpose_conv2d(
+            x, p["w"], padding, method=method, train=train, plan=plan
+        )
+        return epilib.Epilogue(bias=True, act=act).apply(y, p["b"])
     return transpose_conv2d(
-        x, p["w"], padding, method=method, train=train, plan=plan
-    ) + p["b"]
+        x, p["w"], padding, method=method, train=train, plan=plan,
+        bias=p["b"], act=act,
+    )
 
 
 # ------------------------------------------------------------- dense SwiGLU

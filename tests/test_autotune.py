@@ -20,6 +20,7 @@ def tmp_cache(tmp_path, monkeypatch):
 
 def test_cache_roundtrip_persists_to_disk():
     key = autotune.layer_key(1, 8, 4, 16, 8, 2)
+    assert key.endswith("|e:none")  # v3 keys carry the epilogue signature
     # flat (v1-style) entries are accepted and become the fwd direction
     autotune.record(key, {"method": "unified_reshape", "time_s": 1e-4,
                           "source": "measured"})
@@ -29,29 +30,92 @@ def test_cache_roundtrip_persists_to_disk():
     assert entry is not None and entry["fwd"]["method"] == "unified_reshape"
     assert autotune.best_method(1, 8, 4, 16, 8, 2)["method"] == "unified_reshape"
     blob = json.loads(autotune.cache_path().read_text())
-    assert blob["version"] == 2 and key in blob["entries"]
+    assert blob["version"] == 3 and key in blob["entries"]
 
 
 def test_v1_cache_file_migrates_on_load():
     """Existing $REPRO_AUTOTUNE_CACHE files from the forward-only schema
     keep answering for the fwd direction; bwd/step stay cold; the next save
-    rewrites the file as v2."""
-    key = autotune.layer_key(1, 8, 4, 16, 8, 2)
+    rewrites the file as v3 (keys gain the e:none epilogue component)."""
+    v1key = "cpu|b1|n8|k4|ci16|co8|p2|float32"  # pre-epilogue key spelling
     autotune.cache_path().parent.mkdir(parents=True, exist_ok=True)
     autotune.cache_path().write_text(json.dumps({
         "version": 1,
-        "entries": {key: {"method": "unified_matmul", "time_s": 2e-4,
-                          "source": "measured"}},
+        "entries": {v1key: {"method": "unified_matmul", "time_s": 2e-4,
+                            "source": "measured"}},
     }))
     assert autotune.best_method(1, 8, 4, 16, 8, 2)["method"] == "unified_matmul"
     assert autotune.best_bwd(1, 8, 4, 16, 8, 2) is None
-    # recording any direction persists the migrated record as v2
+    # recording any direction persists the migrated record as v3
+    key = autotune.layer_key(1, 8, 4, 16, 8, 2)
     autotune.record(key, {"method": "lax", "time_s": 1e-4,
                           "source": "measured"}, direction="bwd")
     blob = json.loads(autotune.cache_path().read_text())
-    assert blob["version"] == 2
+    assert blob["version"] == 3
     assert blob["entries"][key]["fwd"]["method"] == "unified_matmul"
     assert blob["entries"][key]["bwd"]["method"] == "lax"
+
+
+def test_v2_cache_file_migrates_to_v3_keeping_tiles():
+    """v2 caches (per-direction records, no epilogue key component) load,
+    answer for the e:none signature WITH their tuned tiles intact, and are
+    rewritten as v3 on the next save."""
+    v2key = "cpu|b1|n8|k4|ci16|co8|p2|float32"
+    autotune.cache_path().parent.mkdir(parents=True, exist_ok=True)
+    autotune.cache_path().write_text(json.dumps({
+        "version": 2,
+        "entries": {v2key: {
+            "fwd": {"method": "pallas_fused", "time_s": 2e-4,
+                    "source": "measured", "tile_h": 16, "tile_w": 128},
+            "bwd": {"method": "pallas", "time_s": 1e-4,
+                    "source": "measured", "tile_h": 8, "tile_w": 64},
+        }},
+    }))
+    hit = autotune.best_method(1, 8, 4, 16, 8, 2)
+    assert hit["method"] == "pallas_fused"
+    assert (hit["tile_h"], hit["tile_w"]) == (16, 128)
+    bwd = autotune.best_bwd(1, 8, 4, 16, 8, 2)
+    assert bwd["method"] == "pallas" and bwd["tile_h"] == 8
+    # any write re-saves the migrated view as v3 without losing the tiles
+    autotune.record(autotune.layer_key(9, 9, 9, 9, 9, 9),
+                    {"method": "conventional", "time_s": 1.0, "source": "t"})
+    blob = json.loads(autotune.cache_path().read_text())
+    assert blob["version"] == 3
+    migrated = blob["entries"][autotune.layer_key(1, 8, 4, 16, 8, 2)]
+    assert migrated["fwd"]["tile_h"] == 16
+    assert migrated["bwd"]["tile_w"] == 64
+
+
+def test_layer_key_includes_epilogue_signature():
+    from repro.kernels.epilogue import Epilogue
+
+    k_none = autotune.layer_key(1, 8, 4, 16, 8, 2)
+    k_relu = autotune.layer_key(
+        1, 8, 4, 16, 8, 2, epilogue=Epilogue(bias=True, act="relu")
+    )
+    k_tanh = autotune.layer_key(
+        1, 8, 4, 16, 8, 2, epilogue=Epilogue(bias=True, act="tanh")
+    )
+    assert len({k_none, k_relu, k_tanh}) == 3
+    assert k_relu.endswith("|e:b+relu") and k_tanh.endswith("|e:b+tanh")
+    # identity epilogues normalize to the bare signature
+    assert autotune.layer_key(1, 8, 4, 16, 8, 2,
+                              epilogue=Epilogue()) == k_none
+
+
+def test_prune_drops_unparsable_keys_only():
+    good = autotune.layer_key(1, 8, 4, 16, 8, 2)
+    autotune.record(good, {"method": "unified_reshape", "time_s": 1e-4,
+                           "source": "measured"})
+    autotune.record("totally|not|a|layer", {"method": "x", "time_s": 0.0,
+                                            "source": "t"})
+    dropped = autotune.prune_cache()
+    assert dropped == ["totally|not|a|layer"]
+    assert autotune.lookup(good) is not None
+    assert autotune.lookup("totally|not|a|layer") is None
+    blob = json.loads(autotune.cache_path().read_text())
+    assert "totally|not|a|layer" not in blob["entries"]
+    assert autotune.prune_cache() == []  # idempotent
 
 
 def test_layer_key_includes_backend_and_dtype():
@@ -187,7 +251,7 @@ def test_foreign_cache_version_is_preserved_on_save():
     autotune.record(key, {"method": "unified_reshape", "time_s": 1e-4,
                           "source": "measured"})
     blob = json.loads(autotune.cache_path().read_text())
-    assert blob["version"] == 2
+    assert blob["version"] == 3
     bak = autotune.cache_path().with_name(
         autotune.cache_path().name + ".v99.bak"
     )
@@ -203,9 +267,10 @@ def test_step_race_measures_pallas_fused_at_recorded_tiles(monkeypatch):
     seen = []
     orig = ops.transpose_conv2d_pallas
 
-    def spy(x, k, padding=0, tile_h=None, tile_w=None, bwd="auto"):
+    def spy(x, k, padding=0, tile_h=None, tile_w=None, bwd="auto",
+            epilogue=None, bias=None):
         seen.append((tile_h, tile_w))
-        return orig(x, k, padding, tile_h, tile_w, bwd)
+        return orig(x, k, padding, tile_h, tile_w, bwd, epilogue, bias)
 
     monkeypatch.setattr(ops, "transpose_conv2d_pallas", spy)
     rec = autotune.tune_layer(

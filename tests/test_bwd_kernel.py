@@ -197,8 +197,8 @@ def test_lax_vjp_closure_is_cached():
     x = _rand((1, 6, 6, 2))
     k = _rand((4, 4, 2, 2))
     g = _rand((1, 12, 12, 2))
-    ops._lax_bwd(2, (x, k), g)
-    ops._lax_bwd(2, (x, k), g)
+    ops._lax_bwd(2, (x, k, None, None), g)
+    ops._lax_bwd(2, (x, k, None, None), g)
     info = ops._unified_vjp_fn.cache_info()
     assert info.misses == 1 and info.hits >= 1
 

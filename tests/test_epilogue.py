@@ -1,0 +1,307 @@
+"""Fused bias+activation epilogues: the Epilogue algebra, in-kernel fusion
+vs unfused-kernel-plus-post-ops equivalence (fwd + grads, every activation,
+fp32 + bf16), the fused backward prologue / dual dw+db accumulator, and the
+bias BlockSpec broadcast discipline."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import transpose_conv as tc
+from repro.kernels import epilogue as epilib
+from repro.kernels import ops
+from repro.kernels.epilogue import Epilogue
+from repro.kernels.transpose_conv2d import (
+    transpose_conv2d_pallas,
+    transpose_conv2d_pallas_phase,
+)
+from repro.kernels.transpose_conv2d_bwd import (
+    epilogue_grad_pallas,
+    transpose_conv2d_bwd_pallas,
+    transpose_conv2d_dw_pallas,
+)
+
+ACTS = ("none", "relu", "tanh", "leaky_relu")
+
+
+@pytest.fixture(autouse=True)
+def tmp_cache(tmp_path, monkeypatch):
+    from repro.kernels import autotune
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+    autotune.clear_cache(memory_only=True)
+    yield
+    autotune.clear_cache(memory_only=True)
+
+
+def _layer(rng, n_in, n_k, cin, cout, dtype=jnp.float32, scale=0.3):
+    x = jnp.asarray(rng.normal(size=(2, n_in, n_in, cin)), dtype)
+    k = jnp.asarray(rng.normal(size=(n_k, n_k, cin, cout)) * scale, dtype)
+    b = jnp.asarray(rng.normal(size=(cout,)), dtype)
+    return x, k, b
+
+
+# ------------------------------------------------------------ the algebra
+
+def test_epilogue_tags_and_canonical():
+    assert Epilogue().tag() == "none"
+    assert Epilogue(bias=True).tag() == "b"
+    assert Epilogue(act="relu").tag() == "relu"
+    assert Epilogue(bias=True, act="tanh").tag() == "b+tanh"
+    assert Epilogue(bias=True, act="leaky_relu").tag() == "b+leaky0.2"
+    assert epilib.canonical(None) is None
+    assert epilib.canonical(Epilogue()) is None  # identity normalizes away
+    e = Epilogue(bias=True, act="relu")
+    assert epilib.canonical(e) == e
+    assert epilib.make(None, "none") is None
+    assert epilib.make(jnp.ones(3), "relu") == Epilogue(bias=True, act="relu")
+
+
+def test_epilogue_validates():
+    with pytest.raises(ValueError, match="unknown activation"):
+        Epilogue(act="gelu")
+    with pytest.raises(ValueError, match="slope"):
+        Epilogue(act="leaky_relu", slope=0.0)
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_grad_from_y_matches_autodiff(act):
+    """act'(y) from the saved post-activation output must equal jax's AD of
+    the forward apply — the residual-saving trick's correctness."""
+    epi = Epilogue(act=act)
+    u = jnp.asarray(np.random.default_rng(0).normal(size=(64,)), jnp.float32)
+    g = jnp.asarray(np.random.default_rng(1).normal(size=(64,)), jnp.float32)
+    y, vjp = jax.vjp(epi.apply_act, u)
+    (want,) = vjp(g)
+    got = epi.grad_from_y(g, y)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ------------------------- fused kernel == unfused kernel + post-ops (fwd)
+
+@pytest.mark.parametrize("act", ACTS)
+@pytest.mark.parametrize("n_in,n_k,pad", [(6, 4, 2), (5, 3, 1), (7, 5, 0)])
+def test_fused_forward_matches_postops(act, n_in, n_k, pad):
+    """Odd kernels/paddings/shapes included: the in-kernel epilogue must
+    equal the bare kernel followed by the composed post-ops, both Pallas
+    grids."""
+    rng = np.random.default_rng(0)
+    x, k, b = _layer(rng, n_in, n_k, 3, 4)
+    epi = Epilogue(bias=True, act=act)
+    want = epi.apply(transpose_conv2d_pallas(x, k, pad), b)
+    got = transpose_conv2d_pallas(x, k, pad, epilogue=epi, bias=b)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    got_phase = transpose_conv2d_pallas_phase(x, k, pad, epilogue=epi, bias=b)
+    np.testing.assert_allclose(got_phase, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("act", ["relu", "tanh"])
+def test_fused_grads_match_postops(act, dtype):
+    """Fused-epilogue fwd/grad ≡ unfused-kernel-plus-post-ops, through the
+    ops custom VJP (lax backward), fp32 tight / bf16 loose."""
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    tol = 2e-2 if dtype == "bfloat16" else 2e-5
+    rng = np.random.default_rng(1)
+    x, k, b = _layer(rng, 6, 4, 3, 4, dtype=dt)
+    epi = Epilogue(bias=True, act=act)
+
+    def fused(x, k, b):
+        return ops.transpose_conv2d_pallas(
+            x, k, 2, None, None, "lax", epi, b
+        ).sum()
+
+    def postops(x, k, b):
+        y = ops.transpose_conv2d_pallas(x, k, 2, None, None, "lax")
+        return epi.apply(y, b).sum()
+
+    np.testing.assert_allclose(
+        fused(x, k, b), postops(x, k, b), rtol=tol, atol=tol
+    )
+    gf = jax.grad(fused, argnums=(0, 1, 2))(x, k, b)
+    gp = jax.grad(postops, argnums=(0, 1, 2))(x, k, b)
+    for a, w in zip(gf, gp):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(w, np.float32),
+            rtol=tol, atol=tol,
+        )
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_pallas_backward_matches_lax_backward(act):
+    """The segregated Pallas backward (fused g·act'(y) prologue + dual
+    dw/db accumulator) must agree with the lax VJP of the composed layer
+    for every activation."""
+    rng = np.random.default_rng(2)
+    x, k, b = _layer(rng, 6, 4, 2, 3)
+    epi = Epilogue(bias=True, act=act)
+
+    def f(x, k, b):
+        return epi.apply(tc.transpose_conv_unified(x, k, 2), b)
+
+    y, vjp = jax.vjp(f, x, k, b)
+    g = jnp.asarray(rng.normal(size=y.shape), jnp.float32)
+    dx_w, dw_w, db_w = vjp(g)
+    dx, dw, db = transpose_conv2d_bwd_pallas(x, k, g, 2, epilogue=epi, y=y)
+    np.testing.assert_allclose(dx, dx_w, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(dw, dw_w, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(db, db_w, rtol=2e-4, atol=2e-4)
+
+
+def test_ops_grad_with_forced_pallas_bwd():
+    """End-to-end: the custom VJP with bwd='pallas' and a fused epilogue
+    returns the same (dx, dw, db) as the composed-layer reference."""
+    rng = np.random.default_rng(3)
+    x, k, b = _layer(rng, 6, 4, 2, 3)
+    epi = Epilogue(bias=True, act="relu")
+
+    def fused(x, k, b):
+        return ops.transpose_conv2d_pallas(
+            x, k, 2, None, None, "pallas", epi, b
+        ).sum()
+
+    def ref(x, k, b):
+        return epi.apply(tc.transpose_conv_unified(x, k, 2), b).sum()
+
+    gf = jax.grad(fused, argnums=(0, 1, 2))(x, k, b)
+    gr = jax.grad(ref, argnums=(0, 1, 2))(x, k, b)
+    for a, w in zip(gf, gr):
+        np.testing.assert_allclose(a, w, rtol=2e-4, atol=2e-4)
+
+
+def test_epilogue_grad_prologue_kernel():
+    """The fused Pallas prologue gm = g·act'(y) equals the jnp formula,
+    including non-dividing row tiles."""
+    rng = np.random.default_rng(4)
+    for m in (5, 8, 13):
+        g = jnp.asarray(rng.normal(size=(2, m, m, 3)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(2, m, m, 3)), jnp.float32)
+        for act in ("relu", "tanh", "leaky_relu"):
+            epi = Epilogue(act=act)
+            got = epilogue_grad_pallas(g, y, epi, tile_m=4)
+            want = epi.grad_from_y(g, y)
+            np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # identity epilogues pass g through untouched
+    assert epilogue_grad_pallas(g, y, None) is g
+
+
+def test_dw_db_dual_accumulator_matches_separate_reductions():
+    """with_db=True must return the identical dw as the single-output
+    launch plus db == g summed over batch×space — including non-dividing
+    h tiles and odd output extents."""
+    rng = np.random.default_rng(5)
+    for n_in, n_k, pad in [(6, 4, 2), (5, 3, 1)]:
+        x = jnp.asarray(rng.normal(size=(2, n_in, n_in, 3)), jnp.float32)
+        m = 2 * n_in - n_k + 2 * pad
+        g = jnp.asarray(rng.normal(size=(2, m, m, 4)), jnp.float32)
+        dw_only = transpose_conv2d_dw_pallas(x, g, n_k, pad, tile_h=3)
+        dw, db = transpose_conv2d_dw_pallas(
+            x, g, n_k, pad, tile_h=3, with_db=True
+        )
+        np.testing.assert_allclose(dw, dw_only, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(
+            db, g.sum((0, 1, 2)), rtol=1e-5, atol=1e-5
+        )
+
+
+# --------------------------------------------------- BlockSpec discipline
+
+def test_bias_blockspec_is_broadcast_not_retiled(monkeypatch):
+    """The bias ref must be ONE block per cout tile: its index map may
+    follow the cout grid axis only — never the batch/spatial/cin axes (a
+    re-tiled bias would re-fetch the vector every grid step)."""
+    from jax.experimental import pallas as pl
+
+    from repro.kernels import transpose_conv2d as k2d
+
+    captured = {}
+    orig = pl.pallas_call
+
+    def spy(kernel_fn, **kw):
+        captured["in_specs"] = kw.get("in_specs")
+        return orig(kernel_fn, **kw)
+
+    monkeypatch.setattr(k2d.pl, "pallas_call", spy)
+    jax.clear_caches()
+    rng = np.random.default_rng(6)
+    x, k, b = _layer(rng, 9, 4, 2, 6)
+    epi = Epilogue(bias=True, act="relu")
+    transpose_conv2d_pallas(
+        x, k, 2, tile_h=2, tile_w=2, cout_tile=3, epilogue=epi, bias=b
+    )
+    in_specs = captured["in_specs"]
+    assert len(in_specs) == 3, "x, stacked kernel, bias"
+    bias_spec = in_specs[2]
+    im = bias_spec.index_map
+    base = im(0, 0, 0, 0, 0)
+    # batch, h_tile, w_tile and cin_tile steps must NOT move the bias block
+    for pt in [(1, 0, 0, 0, 0), (0, 3, 0, 0, 0), (0, 0, 2, 0, 0),
+               (0, 0, 0, 0, 1)]:
+        assert im(*pt) == base, f"bias block re-tiled at grid point {pt}"
+    # ... while the cout axis selects the matching bias slice
+    assert im(0, 0, 0, 1, 0) != base
+
+
+# ----------------------------------------------------- plan-level routing
+
+def test_plan_epilogue_mismatch_raises():
+    from repro.kernels import plan as planlib
+
+    lp = planlib.plan_layer(2, 6, 4, 2, 3, 2,
+                            epilogue=Epilogue(bias=True, act="relu"))
+    x = jnp.ones((2, 6, 6, 2), jnp.float32)
+    k = jnp.ones((4, 4, 2, 3), jnp.float32)
+    with pytest.raises(ValueError, match="epilogue"):
+        planlib.execute_layer(lp, x, k)  # bias missing
+    with pytest.raises(ValueError, match="epilogue"):
+        tc.transpose_conv2d(x, k, 2, plan=lp)  # epilogue-less call site
+
+
+def test_unfused_epilogue_plan_composes_postops():
+    """A plan whose tuned entry said fuse_epilogue=False still executes the
+    whole layer — via the bare kernel + composed post-ops."""
+    from repro.kernels import autotune
+    from repro.kernels import plan as planlib
+
+    epi = Epilogue(bias=True, act="relu")
+    autotune.record(
+        autotune.layer_key(2, 6, 4, 2, 3, 2, epilogue=epi),
+        {"fwd": {"method": "pallas_fused", "time_s": 0.0, "source": "test",
+                 "tile_h": 2, "tile_w": 4, "fuse_epilogue": False}},
+    )
+    lp = planlib.plan_layer(2, 6, 4, 2, 3, 2, epilogue=epi)
+    assert lp.method == "pallas_fused" and lp.fuse_epilogue is False
+    rng = np.random.default_rng(7)
+    x, k, b = _layer(rng, 6, 4, 2, 3)
+    got = planlib.execute_layer(lp, x, k, bias=b)
+    want = epi.apply(tc.transpose_conv_unified(x, k, 2), b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_tconv_apply_act_routes_through_epilogue():
+    """models.layers.tconv_apply(act=...) == conv + bias + act composed by
+    hand, and its gradient includes the bias."""
+    from repro.models.layers import tconv_apply
+
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(2, 6, 6, 2)), jnp.float32)
+    p = {
+        "w": jnp.asarray(rng.normal(size=(4, 4, 2, 3)) * 0.3, jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(3,)), jnp.float32),
+    }
+    got = tconv_apply(p, x, 2, method="unified", act="relu")
+    want = Epilogue(bias=True, act="relu").apply(
+        tc.transpose_conv_unified(x, p["w"], 2), p["b"]
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    grads = jax.grad(
+        lambda p: tconv_apply(p, x, 2, method="auto", act="relu").sum()
+    )(p)
+    assert float(jnp.max(jnp.abs(grads["b"]))) > 0
+
+
+# The hypothesis property swarm over odd kernels/paddings/shapes and every
+# activation lives in tests/test_property.py (the module that gates cleanly
+# on hypothesis being installed): test_fused_epilogue_equals_postops.

@@ -40,11 +40,33 @@ def test_methods_agree_in_generator(method):
 
 
 def test_flop_reduction_is_4x():
-    """Paper Table 4 models all use 4x4 kernels: exactly 4x MAC reduction."""
+    """Paper Table 4 models all use 4x4 kernels: exactly 4x MAC reduction
+    (on the bare transpose-conv MACs — the epilogue's elementwise ops are
+    method-independent and excluded from the paper's algebra)."""
     for cfg in gan.GAN_ZOO.values():
-        conv = gan.generator_flops(cfg, method="conventional")
-        segd = gan.generator_flops(cfg, method="segregated")
+        conv = gan.generator_flops(cfg, method="conventional",
+                                   include_epilogue=False)
+        segd = gan.generator_flops(cfg, method="segregated",
+                                   include_epilogue=False)
         assert conv == 4 * segd
+
+
+def test_generator_flops_counts_epilogue_element_ops():
+    """The default FLOP count includes what the fused kernel actually
+    executes: one bias-add + one activation op per output element, on TOP
+    of the transpose-conv MACs — identical extra term for every method."""
+    from repro.core.segregation import output_size
+
+    for cfg in gan.GAN_ZOO.values():
+        epi_ops = sum(
+            2 * output_size(hw, cfg.kernel, cfg.padding) ** 2 * cout
+            for hw, _, cout in cfg.layers
+        )
+        for method in ("conventional", "segregated"):
+            bare = gan.generator_flops(cfg, method=method,
+                                       include_epilogue=False)
+            full = gan.generator_flops(cfg, method=method)
+            assert full == bare + epi_ops
 
 
 def test_ebgan_memory_savings_matches_paper():
@@ -76,6 +98,23 @@ def test_memory_savings_golden_values(name):
 
 def test_memory_savings_goldens_cover_the_zoo():
     assert set(GOLDEN_SAVINGS) == set(gan.GAN_ZOO)
+
+
+def test_memory_savings_epilogue_counts_eliminated_intermediates():
+    """include_epilogue=True adds exactly the post-op round trips the fused
+    epilogue eliminates: 2 extra reads + 2 extra writes of each layer's
+    (M, M, Cout) fp32 output map. The default stays the paper's figure."""
+    from repro.core.segregation import output_size
+
+    for name, cfg in gan.GAN_ZOO.items():
+        epi_bytes = sum(
+            4 * output_size(hw, cfg.kernel, cfg.padding) ** 2 * cout * 4
+            for hw, _, cout in cfg.layers
+        )
+        assert gan.generator_memory_savings(cfg) == GOLDEN_SAVINGS[name]
+        assert gan.generator_memory_savings(
+            cfg, include_epilogue=True
+        ) == GOLDEN_SAVINGS[name] + epi_bytes
 
 
 def test_gan_training_step_improves():

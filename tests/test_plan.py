@@ -171,7 +171,9 @@ def test_plan_matches_legacy_auto_fwd_and_grads(name, dtype):
         lambda a: a.astype(dt), gan.generator_init(jax.random.key(0), cfg)
     )
     z = jax.random.normal(jax.random.key(1), (2, cfg.z_dim)).astype(dt)
-    plan = planlib.compile_plan(cfg, 2, dtype=dt, train=True)
+    # generator_plan bakes the fused bias+activation epilogues in — the
+    # same whole-layer unit the legacy auto path resolves per call
+    plan = gan.generator_plan(cfg, 2, dtype=dt, train=True)
 
     got = gan.generator_apply(params, cfg, z, plan=plan)
     want = gan.generator_apply(params, cfg, z, method="auto", train=True)

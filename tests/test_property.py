@@ -3,6 +3,7 @@
 hypothesis is an optional dev dependency (requirements-dev.txt); the module
 skips cleanly where it's absent so bare environments still collect the suite.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -95,3 +96,64 @@ def test_segregate_merge_roundtrip(n, seed):
     k = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
     subs = seg.segregate_kernel(k)
     np.testing.assert_array_equal(seg.merge_subkernels(subs, n), k)
+
+
+@given(
+    n_in=st.integers(3, 7),
+    n_k=st.integers(2, 5),
+    pad=st.integers(0, 2),
+    cin=st.integers(1, 3),
+    cout=st.integers(1, 3),
+    act=st.sampled_from(("none", "relu", "tanh", "leaky_relu")),
+    use_bias=st.booleans(),
+    bf16=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_fused_epilogue_equals_postops(
+    n_in, n_k, pad, cin, cout, act, use_bias, bf16, seed
+):
+    """Swarm over odd kernels/paddings/shapes, fp32 + bf16: the in-kernel
+    fused epilogue's forward AND gradients must equal the unfused
+    kernel-plus-post-ops spelling for every activation/bias combination
+    (the numerical-interchangeability contract of the epilogue subsystem).
+    """
+    from repro.kernels import epilogue as epilib
+    from repro.kernels import ops
+    from repro.kernels.epilogue import Epilogue
+
+    if 2 * n_in - n_k + 2 * pad <= 0:
+        return
+    epi = epilib.canonical(Epilogue(bias=use_bias, act=act))
+    dt = jnp.bfloat16 if bf16 else jnp.float32
+    tol = 3e-2 if bf16 else 3e-5
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, n_in, n_in, cin)), dt)
+    k = jnp.asarray(rng.normal(size=(n_k, n_k, cin, cout)) * 0.3, dt)
+    b = jnp.asarray(rng.normal(size=(cout,)), dt) if use_bias else None
+    bias_arg = b if (epi is not None and epi.bias) else None
+
+    def fused(x, k, b):
+        return ops.transpose_conv2d_pallas(
+            x, k, pad, None, None, "lax", epi,
+            b if (epi is not None and epi.bias) else None,
+        ).sum()
+
+    def postops(x, k, b):
+        y = ops.transpose_conv2d_pallas(x, k, pad, None, None, "lax")
+        if epi is not None:
+            y = epi.apply(y, b)
+        return y.sum()
+
+    np.testing.assert_allclose(
+        np.asarray(fused(x, k, bias_arg), np.float32),
+        np.asarray(postops(x, k, b), np.float32), rtol=tol, atol=tol,
+    )
+    argnums = (0, 1, 2) if bias_arg is not None else (0, 1)
+    gf = jax.grad(fused, argnums=argnums)(x, k, bias_arg)
+    gp = jax.grad(postops, argnums=argnums)(x, k, b)
+    for a, w in zip(gf, gp):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(w, np.float32),
+            rtol=tol, atol=tol,
+        )
