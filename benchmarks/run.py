@@ -6,9 +6,12 @@
 #
 # Quick mode smoke-runs forward, backward, AND full-train-step timings
 # (transpose_conv_bench --quick --check) and fails on the Pallas gates
-# (fused >= per-phase, pallas bwd >= lax bwd). Full mode additionally runs
-# table4_gans, which merges its train rows into the same artifact (the
-# bench preserves the table4_train section when it rewrites the file).
+# (fused >= per-phase, pallas bwd >= lax bwd), then the serving benchmark
+# (serving_bench --quick --check), failing unless the bucketed engine beats
+# sequential per-request dispatch by the floor factor with zero steady-state
+# recompiles. Full mode additionally runs table4_gans, which merges its
+# train rows into the same artifact (the bench preserves the table4_train
+# section when it rewrites the file).
 from __future__ import annotations
 
 import argparse
@@ -23,13 +26,17 @@ def main(argv=None) -> None:
     )
     args = ap.parse_args(argv)
 
-    from benchmarks import transpose_conv_bench
+    from benchmarks import serving_bench, transpose_conv_bench
 
     if args.quick:
         t0 = time.time()
         print("\n===== transpose_conv_bench (quick) =====")
         transpose_conv_bench.main(["--quick", "--check"])
         print(f"[transpose_conv_bench] {time.time() - t0:.1f}s")
+        t0 = time.time()
+        print("\n===== serving_bench (quick) =====")
+        serving_bench.main(["--quick", "--check"])
+        print(f"[serving_bench] {time.time() - t0:.1f}s")
         return
 
     from benchmarks import (
@@ -56,6 +63,11 @@ def main(argv=None) -> None:
     print("\n===== transpose_conv_bench =====")
     transpose_conv_bench.main(["--check"])
     print(f"[transpose_conv_bench] {time.time() - t0:.1f}s")
+
+    t0 = time.time()
+    print("\n===== serving_bench =====")
+    serving_bench.main(["--check"])
+    print(f"[serving_bench] {time.time() - t0:.1f}s")
 
 
 if __name__ == "__main__":

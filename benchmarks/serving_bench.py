@@ -1,0 +1,189 @@
+"""Serving-throughput benchmark: bucketed dynamic batching vs sequential
+per-request generation on the same request trace.
+
+The `serving` section this writes into BENCH_transpose_conv.json answers
+the deployment question the engine exists for: given a stream of small
+mixed-size generation requests, how much throughput does bucket-batched
+dispatch over precompiled TconvPlans buy over serving each request
+individually (one warmed, plan-compiled jit call per request — the
+strongest sequential baseline the repo has)?
+
+Both sides run the identical trace and the identical executables
+(whole-generator plans, fused epilogues); the only difference is batch
+formation. Under ``--check`` the section gates two invariants:
+
+* bucketed engine throughput >= SERVING_SPEEDUP_FLOOR x sequential;
+* zero steady-state recompiles (the engine's trace-time counter must not
+  move after warmup across the whole timed run).
+
+Quick mode (CI) uses a reduced DCGAN and a short trace; full mode serves
+two zoo models through one engine at longer traces.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+SERVING_SPEEDUP_FLOOR = 1.3
+
+
+def make_trace(models, z_dim, n_requests, *, seed=0):
+    """Deterministic Poisson-style trace: request sizes drawn from a
+    small-skewed distribution (most requests want 1-2 samples), models
+    round-robined. Returns (model, z) pairs in arrival order."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.choice([1, 1, 1, 2], size=n_requests)
+    return [
+        (models[i % len(models)],
+         rng.standard_normal((int(n), z_dim)).astype(np.float32))
+        for i, n in enumerate(sizes)
+    ]
+
+
+def bench_serving(*, quick: bool) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import gan
+    from repro.serve import BucketPolicy, GanEngine, GenRequest
+    from repro.serve.gan_engine import sequential_executables
+
+    names = ["dcgan"] if quick else ["dcgan", "gpgan"]
+    cfgs = {n: gan.reduced_config(gan.GAN_ZOO[n], scale=64) for n in names}
+    n_requests = 48 if quick else 160
+    repeats = 2 if quick else 3
+
+    policy = BucketPolicy(
+        buckets=(1, 2, 4, 8, 16), max_wait_s=0.05, max_queue=4 * n_requests
+    )
+    engine = GanEngine(policy)
+    params = {}
+    for i, (name, cfg) in enumerate(cfgs.items()):
+        params[name] = gan.generator_init(jax.random.key(i), cfg)
+        engine.register(cfg, params[name], name=name)
+    engine.warmup()
+
+    trace = make_trace(names, next(iter(cfgs.values())).z_dim, n_requests)
+
+    # ---- bucketed engine: burst-submit the trace, drain, best of repeats
+    recompiles_before = engine.metrics.recompiles
+    engine_s = float("inf")
+    for _ in range(repeats):
+        reqs = [GenRequest(m, z) for m, z in trace]
+        t0 = time.perf_counter()
+        engine.serve(reqs)
+        engine_s = min(engine_s, time.perf_counter() - t0)
+    recompiles_steady = engine.metrics.recompiles - recompiles_before
+
+    # ---- sequential baseline: one warmed plan-compiled call per request,
+    # at each request's exact size (no padding — the baseline's advantage)
+    seq_fns = {}
+    for name, cfg in cfgs.items():
+        sizes = sorted({z.shape[0] for m, z in trace if m == name})
+        for n, fn in sequential_executables(cfg, params[name], sizes).items():
+            seq_fns[name, n] = fn
+
+    sequential_s = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for m, z in trace:
+            jax.block_until_ready(
+                seq_fns[m, z.shape[0]](params[m], jnp.asarray(z))
+            )
+        sequential_s = min(sequential_s, time.perf_counter() - t0)
+
+    n_samples = sum(z.shape[0] for _, z in trace)
+    m = engine.metrics
+    return {
+        "backend": jax.default_backend(),
+        "quick": quick,
+        "models": names,
+        "buckets": list(policy.buckets),
+        "n_requests": n_requests,
+        "n_samples": n_samples,
+        "repeats": repeats,
+        "engine_s": engine_s,
+        "sequential_s": sequential_s,
+        "speedup": sequential_s / engine_s,
+        "samples_per_s": n_samples / engine_s,
+        "pad_waste": m.pad_waste,
+        "warmup_recompiles": engine.warmup_recompiles,
+        "recompiles_steady": recompiles_steady,
+        "latency_s": m.latency_percentiles(),
+    }
+
+
+def check(section: dict) -> list[str]:
+    """The acceptance gates: bucketed serving must beat sequential dispatch
+    by the floor factor, with zero steady-state recompiles."""
+    bad = []
+    if section["speedup"] < SERVING_SPEEDUP_FLOOR:
+        bad.append(
+            f"serving: speedup={section['speedup']:.3f} < "
+            f"{SERVING_SPEEDUP_FLOOR}x sequential "
+            f"(engine {section['engine_s']:.4f}s vs "
+            f"sequential {section['sequential_s']:.4f}s)"
+        )
+    if section["recompiles_steady"] != 0:
+        bad.append(
+            f"serving: {section['recompiles_steady']} steady-state "
+            "recompiles after warmup (must be 0)"
+        )
+    return bad
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke subset: dcgan only, short trace")
+    ap.add_argument("--out", default="BENCH_transpose_conv.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless engine >= "
+                         f"{SERVING_SPEEDUP_FLOOR}x sequential with zero "
+                         "steady-state recompiles")
+    args = ap.parse_args(argv)
+
+    section = bench_serving(quick=args.quick)
+
+    out_path = Path(args.out)
+    merged = {}
+    if out_path.exists():   # merge into the shared perf artifact
+        try:
+            merged = json.loads(out_path.read_text())
+            if not isinstance(merged, dict):
+                merged = {}
+        except (json.JSONDecodeError, OSError):
+            merged = {}
+    merged["serving"] = section
+    out_path.write_text(json.dumps(merged, indent=1, sort_keys=True))
+
+    lat = section["latency_s"]
+    print(f"# serving ({'quick' if args.quick else 'full'}, "
+          f"backend={section['backend']}): "
+          f"{section['n_requests']} reqs / {section['n_samples']} samples, "
+          f"models={','.join(section['models'])}")
+    print(f"engine {section['engine_s']:.4f}s "
+          f"({section['samples_per_s']:.0f} samples/s) vs sequential "
+          f"{section['sequential_s']:.4f}s -> x{section['speedup']:.2f}; "
+          f"pad waste {section['pad_waste'] * 100:.1f}%, "
+          f"recompiles steady {section['recompiles_steady']} "
+          f"(warmup {section['warmup_recompiles']}); "
+          f"latency ms p50 {lat['p50'] * 1e3:.1f} p95 {lat['p95'] * 1e3:.1f} "
+          f"p99 {lat['p99'] * 1e3:.1f}")
+
+    bad = check(section)
+    if bad:
+        print("PERF REGRESSION on:", "; ".join(bad))
+        if args.check:
+            raise SystemExit(1)
+    elif args.check:
+        print(f"# check ok: bucketed engine >= {SERVING_SPEEDUP_FLOOR}x "
+              "sequential per-request dispatch, zero steady-state recompiles")
+
+
+if __name__ == "__main__":
+    main()

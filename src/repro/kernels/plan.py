@@ -28,6 +28,10 @@ per-op; this module is that planning step:
   the cached variant memoizes per (layer signature, cache generation) and
   is what the legacy ``transpose_conv2d(method="auto")`` wrapper uses, so
   repeated eager calls build the plan once per cache state.
+* :func:`compile_plan_buckets` — ``{batch: TconvPlan}`` over a set of batch
+  buckets, resolved through the memo; the serving engine's warmup
+  (:mod:`repro.serve.gan_engine`) and the serving benchmark compile their
+  fixed executable sets with this instead of hand-rolling the loop.
 
 Resolution rules (identical to the dispatch they replace):
 
@@ -295,6 +299,45 @@ def compile_plan(cfg, batch: int, dtype="float32", *, train: bool = False,
         for (hw, cin, cout), epi in zip(cfg.layers, epilogues)
     )
     return TconvPlan(name=getattr(cfg, "name", "tconv"), layers=layers)
+
+
+def compile_plan_buckets(cfg, batches, dtype="float32", *,
+                         train: bool = False, method: str = "auto",
+                         epilogues=None) -> dict:
+    """Compile one :class:`TconvPlan` per batch bucket: ``{batch: plan}``.
+
+    The serving engine (and the serving benchmark) run a fixed set of batch
+    **buckets** so their steady state is a fixed set of executables; this is
+    the one-call warmup for that set. Layer resolution goes through
+    :func:`plan_layer_cached`, so buckets sharing a layer signature resolve
+    it once per autotune-cache generation instead of re-consulting the
+    cache per bucket — and a later ``compile_plan_buckets`` call in the same
+    generation is pure memo lookups. Arguments mirror
+    :func:`compile_plan`; ``batches`` is any iterable of ints (duplicates
+    collapse).
+    """
+    import jax.numpy as jnp
+
+    dt = str(jnp.dtype(dtype))
+    if epilogues is None:
+        epilogues = (None,) * len(cfg.layers)
+    if len(epilogues) != len(cfg.layers):
+        raise ValueError(
+            f"epilogues has {len(epilogues)} entries for "
+            f"{len(cfg.layers)} layers"
+        )
+    name = getattr(cfg, "name", "tconv")
+    plans = {}
+    for batch in sorted({int(b) for b in batches}):
+        if batch < 1:
+            raise ValueError(f"batch buckets must be positive, got {batch}")
+        layers = tuple(
+            plan_layer_cached(batch, hw, cfg.kernel, cin, cout, cfg.padding,
+                              dt, method=method, train=train, epilogue=epi)
+            for (hw, cin, cout), epi in zip(cfg.layers, epilogues)
+        )
+        plans[batch] = TconvPlan(name=name, layers=layers)
+    return plans
 
 
 def execute_layer(lp: LayerPlan, x, kernel, *, bias=None, precision=None):

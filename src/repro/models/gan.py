@@ -55,6 +55,20 @@ EBGAN = GANConfig(
 GAN_ZOO = {g.name: g for g in (DCGAN, ARTGAN, GPGAN, EBGAN)}
 
 
+def reduced_config(cfg: GANConfig, scale: int = 16) -> GANConfig:
+    """Channel-reduced copy of a zoo config (floor of 2 channels per layer):
+    the same layer stack and spatial geometry at 1/``scale`` the width, so
+    tests, examples, and the serving benchmark exercise the full dispatch
+    stack in CPU-friendly seconds."""
+    from dataclasses import replace
+
+    return replace(
+        cfg,
+        layers=tuple((hw, max(cin // scale, 2), max(cout // scale, 2))
+                     for hw, cin, cout in cfg.layers),
+    )
+
+
 def generator_act(cfg: GANConfig, i: int) -> str:
     """Activation of generator layer ``i``: relu mid-stack, tanh output."""
     return "tanh" if i == len(cfg.layers) - 1 else "relu"

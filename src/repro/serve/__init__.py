@@ -1,1 +1,4 @@
+from repro.serve.batching import BucketPolicy, QueueFull, pow2_buckets
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.gan_engine import GanEngine, GenRequest
+from repro.serve.metrics import ServeMetrics

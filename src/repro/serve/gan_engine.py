@@ -1,0 +1,332 @@
+"""Plan-served GAN inference engine: bucketed dynamic batching over
+precompiled :class:`~repro.kernels.plan.TconvPlan`s.
+
+PRs 1-4 made a generator *call* cheap (unified kernel, compile-once plans,
+fused epilogues); this module makes a generator *service* cheap. The
+deployment setting is the one HUGE^2 (arXiv:1907.11210) and GANAX
+(arXiv:1806.01107) target — GAN generators under sustained request traffic
+— and the design leans on exactly what the plan layer guarantees: a
+``TconvPlan`` is keyed on its batch size, so a **fixed set of batch
+buckets** means a fixed set of executables and zero steady-state retraces.
+
+The loop is the classic dynamic-batching triangle:
+
+1. **warmup** — for every registered model and every policy bucket, compile
+   the whole-generator plan (:func:`~repro.kernels.plan.compile_plan_buckets`,
+   fused epilogues included) and trace+compile one jitted executable. Every
+   compile increments the metrics recompile counter *at trace time*, so a
+   flat counter after warmup is machine-checkable proof of zero retraces.
+2. **admit** — requests (each ``n`` latent rows for one model) enter a
+   per-model FIFO queue, or are rejected with
+   :class:`~repro.serve.batching.QueueFull` when the queued-sample bound is
+   exceeded (backpressure: bounded queueing latency under overload).
+3. **bucket + execute + recycle** — the step loop serves the model whose
+   head request is oldest, packs whole head-of-queue requests into the
+   smallest bucket that holds them (pad-and-mask: the batch is padded with
+   zero rows up to the bucket, pad rows are sliced off the output), runs
+   the precompiled executable, and hands each request its contiguous slice.
+   A max-wait deadline flushes partial batches so light traffic is not
+   held hostage to batch formation.
+
+Single-host reference runtime, same status as the LM
+:class:`~repro.serve.engine.ServeEngine` next door: the batching loop is
+synchronous Python around jitted executables. At production scale the same
+executables run under ``shard_plan_apply`` with the bucket batch sharded
+over the data axes — the policy/metrics layers are unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.batching import BucketPolicy, QueueFull
+from repro.serve.metrics import ServeMetrics
+
+
+@dataclasses.dataclass
+class GenRequest:
+    """One generation request: ``n`` latent rows for one registered model."""
+
+    model: str
+    z: object                  # (n, z_dim) latents
+    # filled by the engine:
+    rid: int = -1
+    t_submit: float = 0.0
+    t_done: float = 0.0
+    output: object = None      # (n, H, W, C) on completion
+    done: bool = False
+
+    @property
+    def n(self) -> int:
+        return int(np.shape(self.z)[0])
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit if self.done else float("nan")
+
+
+@dataclasses.dataclass
+class _ModelSlot:
+    cfg: object
+    params: object
+    plans: dict = dataclasses.field(default_factory=dict)   # bucket -> plan
+    apply: dict = dataclasses.field(default_factory=dict)   # bucket -> jit fn
+    queue: deque = dataclasses.field(default_factory=deque)
+
+
+class GanEngine:
+    """Bucketed dynamic-batching engine over plan-compiled generators.
+
+    ``clock`` is injectable (tests drive the deadline logic with a fake
+    clock); everything else is plain state: a registry of model slots, a
+    policy, and a metrics sink.
+    """
+
+    def __init__(self, policy: BucketPolicy | None = None, *,
+                 dtype="float32", train: bool = False, clock=time.monotonic):
+        self.policy = policy or BucketPolicy()
+        self.dtype = str(jnp.dtype(dtype))
+        self.train = train
+        self.clock = clock
+        self.metrics = ServeMetrics()
+        self.registry: dict[str, _ModelSlot] = {}
+        self.completed: list[GenRequest] = []   # completion order
+        self.warmup_recompiles: int | None = None
+        self._rid = itertools.count()
+
+    # ----------------------------------------------------------- registry
+
+    def register(self, cfg, params, *, name: str | None = None) -> str:
+        """Add one generator (config + trained params) to the engine. Call
+        for each zoo member to be served, then :meth:`warmup` once."""
+        name = name or cfg.name
+        if name in self.registry:
+            raise ValueError(f"model {name!r} already registered")
+        self.registry[name] = _ModelSlot(cfg=cfg, params=params)
+        return name
+
+    def warmup(self) -> None:
+        """Compile every (model, bucket) executable up front: plans via
+        :func:`~repro.kernels.plan.compile_plan_buckets`, then one traced+
+        compiled jit call each on zero latents. After this returns, the
+        metrics recompile counter is frozen at its warmup value
+        (:attr:`warmup_recompiles`) — steady-state serving adds zero."""
+        for name, slot in self.registry.items():
+            for bucket in self.policy.buckets:
+                fn = self._executable(name, bucket)
+                z0 = jnp.zeros((bucket, slot.cfg.z_dim), self.dtype)
+                jax.block_until_ready(fn(slot.params, z0))
+        self.warmup_recompiles = self.metrics.recompiles
+
+    def _executable(self, name: str, bucket: int):
+        """The jitted whole-generator executable for one (model, bucket).
+
+        Built lazily so an un-warmed engine still serves correctly (it just
+        pays the compile inline — and the recompile counter shows it: the
+        counting call sits INSIDE the traced body, so it fires once per
+        trace and never on a jit-cache hit)."""
+        slot = self.registry[name]
+        fn = slot.apply.get(bucket)
+        if fn is None:
+            from repro.kernels.plan import compile_plan_buckets
+            from repro.models.gan import generator_apply, generator_epilogues
+
+            if bucket not in slot.plans:
+                slot.plans.update(compile_plan_buckets(
+                    slot.cfg, [bucket], self.dtype, train=self.train,
+                    epilogues=generator_epilogues(slot.cfg),
+                ))
+            plan = slot.plans[bucket]
+            cfg, metrics = slot.cfg, self.metrics
+
+            def run(params, z):
+                metrics.count_recompile()   # trace-time side effect only
+                return generator_apply(params, cfg, z, plan=plan)
+
+            fn = slot.apply[bucket] = jax.jit(run)
+        return fn
+
+    # ---------------------------------------------------------- admission
+
+    @property
+    def queued_samples(self) -> int:
+        return sum(r.n for s in self.registry.values() for r in s.queue)
+
+    @property
+    def queued_requests(self) -> int:
+        return sum(len(s.queue) for s in self.registry.values())
+
+    def submit(self, req: GenRequest) -> int:
+        """Admit one request (FIFO per model). Raises :class:`QueueFull`
+        when the queued-sample bound would be exceeded (backpressure) and
+        ``ValueError`` for malformed requests — a request must fit a single
+        dispatch (``n <= max_bucket``; split client-side to go bigger)."""
+        slot = self.registry.get(req.model)
+        if slot is None:
+            raise ValueError(
+                f"model {req.model!r} not registered "
+                f"(have {sorted(self.registry)})"
+            )
+        n = req.n
+        if np.ndim(req.z) != 2 or np.shape(req.z)[1] != slot.cfg.z_dim:
+            raise ValueError(
+                f"z must be (n, {slot.cfg.z_dim}), got {np.shape(req.z)}"
+            )
+        if n < 1:
+            raise ValueError("request must carry at least one latent row")
+        if n > self.policy.max_bucket:
+            raise ValueError(
+                f"request of {n} samples exceeds the largest bucket "
+                f"{self.policy.max_bucket}; split it client-side"
+            )
+        if self.queued_samples + n > self.policy.max_queue:
+            self.metrics.record_reject()
+            raise QueueFull(
+                f"queue holds {self.queued_samples} samples, request of {n} "
+                f"exceeds max_queue={self.policy.max_queue}"
+            )
+        req.rid = next(self._rid)
+        req.t_submit = self.clock()
+        self.metrics.record_admit(req.t_submit)
+        slot.queue.append(req)
+        return req.rid
+
+    # --------------------------------------------------------------- step
+
+    def _next_model(self) -> str | None:
+        """FIFO fairness across models: serve whichever queue's HEAD request
+        is oldest (per-queue order is already FIFO)."""
+        best, best_t = None, None
+        for name, slot in self.registry.items():
+            if slot.queue and (best_t is None
+                               or slot.queue[0].t_submit < best_t):
+                best, best_t = name, slot.queue[0].t_submit
+        return best
+
+    def step(self, now: float | None = None, *, drain: bool = False) -> bool:
+        """One batching-loop iteration: pick the model with the oldest head
+        request, dispatch if the policy says flush (``drain=True`` forces a
+        flush — used when no more arrivals are coming). Returns whether a
+        batch ran."""
+        if now is None:
+            now = self.clock()
+        name = self._next_model()
+        if name is None:
+            return False
+        slot = self.registry[name]
+        sizes = [r.n for r in slot.queue]
+        if not drain and not self.policy.should_flush(
+            sizes, now - slot.queue[0].t_submit
+        ):
+            return False
+        count, bucket = self.policy.pack(sizes)
+        reqs = [slot.queue.popleft() for _ in range(count)]
+        self._execute(name, reqs, bucket)
+        return True
+
+    def _execute(self, name: str, reqs: list, bucket: int) -> None:
+        """Pad-and-mask dispatch: concatenate the requests' latents, pad
+        with zero rows up to the bucket, run the precompiled executable,
+        slice each request's contiguous rows back out (the mask is the
+        slice — pad rows never reach a client)."""
+        slot = self.registry[name]
+        z = np.concatenate(
+            [np.asarray(r.z, dtype=self.dtype) for r in reqs], axis=0
+        )
+        n_real = z.shape[0]
+        if n_real < bucket:
+            z = np.concatenate(
+                [z, np.zeros((bucket - n_real, z.shape[1]), z.dtype)], axis=0
+            )
+        t0 = self.clock()
+        out = self._executable(name, bucket)(slot.params, jnp.asarray(z))
+        out = np.asarray(jax.block_until_ready(out))
+        now = self.clock()
+        self.metrics.record_batch(n_real, bucket, now - t0, now)
+        row = 0
+        for r in reqs:
+            r.output = out[row : row + r.n]
+            row += r.n
+            r.done = True
+            r.t_done = now
+            self.metrics.record_completion(r.latency_s)
+            self.completed.append(r)
+
+    # ---------------------------------------------------------------- run
+
+    def serve(self, requests, *, drain: bool = True) -> list:
+        """Burst mode: submit everything, then run the batching loop to
+        completion. Raises :class:`QueueFull` if the burst overflows the
+        queue bound (size ``max_queue`` bursts are admission-safe)."""
+        for r in requests:
+            self.submit(r)
+        while self.step(drain=drain):
+            pass
+        return requests
+
+    def replay(self, requests, arrivals_s, *, sleep=time.sleep) -> list:
+        """Trace-replay mode: submit each request when the wall clock passes
+        its arrival offset (seconds from replay start), batching between
+        arrivals under the live policy (deadline flushes included), then
+        drain. ``requests`` and ``arrivals_s`` are parallel sequences;
+        arrivals must be sorted ascending. Backpressure sheds load instead
+        of aborting the replay: a request rejected with
+        :class:`QueueFull` stays ``done=False`` (and counts in
+        ``metrics.rejected``) while the rest of the trace is served."""
+        order = list(zip(requests, arrivals_s))
+        if any(b < a for (_, a), (_, b) in zip(order, order[1:])):
+            raise ValueError("arrivals_s must be sorted ascending")
+        t0 = self.clock()
+        i = 0
+        while i < len(order) or self.queued_requests:
+            now = self.clock() - t0
+            while i < len(order) and order[i][1] <= now:
+                try:
+                    self.submit(order[i][0])
+                except QueueFull:
+                    pass   # shed: rejected request stays done=False
+                i += 1
+            if self.step():
+                continue
+            if i < len(order):   # idle until the next arrival or deadline
+                wait = order[i][1] - (self.clock() - t0)
+                if self.queued_requests:
+                    wait = min(wait, self.policy.max_wait_s)
+                if wait > 0:
+                    sleep(min(wait, 1e-3))
+            elif self.queued_requests:
+                self.step(drain=True)   # no more arrivals: flush the tail
+        return requests
+
+
+def sequential_executables(cfg, params, sizes, *, dtype="float32",
+                           train: bool = False) -> dict:
+    """Warmed plan-compiled per-size executables ``{n: fn(params, z)}`` —
+    the **sequential per-request dispatch baseline** the serving benchmark
+    and example compare the bucketed engine against. Each callable runs the
+    whole generator at exactly batch ``n`` (no padding, fused epilogues,
+    plan precompiled and traced on zero latents), so the baseline pays only
+    true per-request dispatch cost — the strongest unbatched opponent the
+    repo can field."""
+    from repro.kernels.plan import compile_plan_buckets
+    from repro.models.gan import generator_apply, generator_epilogues
+
+    plans = compile_plan_buckets(
+        cfg, sizes, dtype, train=train, epilogues=generator_epilogues(cfg)
+    )
+    fns = {}
+    for n, plan in plans.items():
+
+        def run(p, z, _plan=plan):
+            return generator_apply(p, cfg, z, plan=_plan)
+
+        fn = jax.jit(run)
+        jax.block_until_ready(fn(params, jnp.zeros((n, cfg.z_dim), dtype)))
+        fns[n] = fn
+    return fns

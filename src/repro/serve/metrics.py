@@ -1,0 +1,123 @@
+"""Serving metrics: throughput, latency percentiles, pad waste, recompiles.
+
+One :class:`ServeMetrics` instance rides inside each engine. Everything is
+recorded in plain Python (no device sync beyond what the engine already
+does), so the overhead per batch is a few dict updates.
+
+The four signals the bucket policy is tuned against:
+
+* **throughput** — completed samples (and requests) per second of serving
+  wall time (first admission to last completion).
+* **latency percentiles** — p50/p95/p99 of request completion latency
+  (admission to output ready). The max-wait deadline bounds the queueing
+  component; bucket sizes trade the execution component against pad waste.
+* **pad-waste fraction** — padded-but-discarded rows / dispatched rows.
+  High pad waste means the bucket set is too coarse for the traffic's size
+  distribution (or ``max_wait_s`` is too small, flushing half-empty).
+* **recompile counter** — incremented at TRACE time by the engine's
+  executables. After warmup this must stay flat: a moving counter in steady
+  state means some (model, bucket, dtype) signature was not warmed and a
+  request paid a multi-second jit compile inline (the exact failure mode
+  bucketing exists to prevent; pinned by the zero-retrace test).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ServeMetrics:
+    def __init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> None:
+        self.latencies_s: list = []       # per completed request
+        self.batches: int = 0             # dispatches
+        self.samples: int = 0             # real rows dispatched
+        self.padded: int = 0              # total rows dispatched (incl. pad)
+        self.requests: int = 0            # completed requests
+        self.rejected: int = 0            # backpressure rejections
+        self.recompiles: int = 0          # trace-time executable builds
+        self.batch_wall_s: float = 0.0    # time inside execute calls
+        self.t_first: float | None = None  # first admission
+        self.t_last: float | None = None   # last completion
+
+    # ---------------------------------------------------------- recording
+
+    def count_recompile(self) -> None:
+        """Called from INSIDE the engine's jitted executables, so it fires
+        once per trace and never on a jit-cache hit."""
+        self.recompiles += 1
+
+    def record_admit(self, now: float) -> None:
+        if self.t_first is None:
+            self.t_first = now
+
+    def record_reject(self) -> None:
+        self.rejected += 1
+
+    def record_batch(self, n_real: int, n_padded: int, wall_s: float,
+                     now: float) -> None:
+        self.batches += 1
+        self.samples += n_real
+        self.padded += n_padded
+        self.batch_wall_s += wall_s
+        self.t_last = now
+
+    def record_completion(self, latency_s: float) -> None:
+        self.requests += 1
+        self.latencies_s.append(latency_s)
+
+    # ---------------------------------------------------------- summaries
+
+    @property
+    def pad_waste(self) -> float:
+        """Fraction of dispatched rows that were padding."""
+        return (self.padded - self.samples) / self.padded if self.padded else 0.0
+
+    @property
+    def elapsed_s(self) -> float:
+        if self.t_first is None or self.t_last is None:
+            return 0.0
+        return max(self.t_last - self.t_first, 0.0)
+
+    def latency_percentiles(self) -> dict:
+        if not self.latencies_s:
+            return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0,
+                    "max": 0.0}
+        a = np.asarray(self.latencies_s)
+        return {
+            "p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean()),
+            "max": float(a.max()),
+        }
+
+    def summary(self) -> dict:
+        el = self.elapsed_s
+        return {
+            "requests": self.requests,
+            "samples": self.samples,
+            "batches": self.batches,
+            "rejected": self.rejected,
+            "recompiles": self.recompiles,
+            "elapsed_s": el,
+            "batch_wall_s": self.batch_wall_s,
+            "requests_per_s": self.requests / el if el else 0.0,
+            "samples_per_s": self.samples / el if el else 0.0,
+            "pad_waste": self.pad_waste,
+            "latency_s": self.latency_percentiles(),
+        }
+
+    def describe(self) -> str:
+        s = self.summary()
+        lat = s["latency_s"]
+        return (
+            f"{s['requests']} reqs / {s['samples']} samples in "
+            f"{s['elapsed_s'] * 1e3:.1f} ms "
+            f"({s['samples_per_s']:.0f} samples/s, {s['batches']} batches, "
+            f"pad waste {s['pad_waste'] * 100:.1f}%, "
+            f"{s['rejected']} rejected, {s['recompiles']} compiles) | "
+            f"latency ms p50 {lat['p50'] * 1e3:.1f} "
+            f"p95 {lat['p95'] * 1e3:.1f} p99 {lat['p99'] * 1e3:.1f}"
+        )

@@ -1,0 +1,400 @@
+"""Plan-served GAN inference engine: bucket policy, metrics, FIFO fairness,
+deadline flush, backpressure, pad-and-mask equivalence with unbatched
+generation, and zero retraces after warmup."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import gan
+from repro.serve import BucketPolicy, GanEngine, GenRequest, QueueFull
+from repro.serve.batching import pow2_buckets
+from repro.serve.metrics import ServeMetrics
+
+_tiny = gan.reduced_config
+
+
+class FakeClock:
+    """Injectable clock for deterministic deadline / fairness tests."""
+
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _z(rng, n, z_dim):
+    return rng.standard_normal((n, z_dim)).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def tiny_dcgan():
+    cfg = _tiny(gan.DCGAN)
+    params = gan.generator_init(jax.random.key(0), cfg)
+    return cfg, params
+
+
+# ------------------------------------------------------------ bucket policy
+
+def test_pow2_buckets():
+    assert pow2_buckets(16) == (1, 2, 4, 8, 16)
+    assert pow2_buckets(1) == (1,)
+    with pytest.raises(ValueError):
+        pow2_buckets(12)
+    with pytest.raises(ValueError):
+        pow2_buckets(0)
+
+
+def test_bucket_for_picks_smallest_holding_bucket():
+    p = BucketPolicy(buckets=(1, 2, 4, 8))
+    assert [p.bucket_for(n) for n in (1, 2, 3, 4, 5, 8)] == [1, 2, 4, 4, 8, 8]
+    with pytest.raises(ValueError):
+        p.bucket_for(9)
+    with pytest.raises(ValueError):
+        p.bucket_for(0)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        BucketPolicy(buckets=())
+    with pytest.raises(ValueError):
+        BucketPolicy(buckets=(4, 2, 8))          # not increasing
+    with pytest.raises(ValueError):
+        BucketPolicy(buckets=(2, 2, 4))          # duplicate
+    with pytest.raises(ValueError):
+        BucketPolicy(buckets=(1, 2), max_queue=1)  # < max bucket
+    with pytest.raises(ValueError):
+        BucketPolicy(max_wait_s=-1.0)
+
+
+def test_pack_is_greedy_fifo_whole_requests():
+    p = BucketPolicy(buckets=(1, 2, 4, 8))
+    assert p.pack([]) == (0, 0)
+    assert p.pack([1]) == (1, 1)
+    assert p.pack([1, 3, 2, 1, 4]) == (4, 8)     # 1+3+2+1=7 -> bucket 8
+    assert p.pack([8, 1]) == (1, 8)              # never split, never reorder
+    assert p.pack([5, 4]) == (1, 8)              # 5+4 > 8: head only
+
+
+def test_should_flush_full_and_deadline():
+    p = BucketPolicy(buckets=(1, 2, 4, 8), max_wait_s=0.5)
+    assert not p.should_flush([], 99.0)
+    assert not p.should_flush([1, 2], 0.1)       # partial, young: wait
+    assert p.should_flush([1, 2], 0.5)           # deadline hit
+    assert p.should_flush([4, 4], 0.0)           # exactly full
+    assert p.should_flush([4, 3, 2], 0.0)        # next req would overflow
+
+
+# ---------------------------------------------------------------- metrics
+
+def test_metrics_summary_math():
+    m = ServeMetrics()
+    m.record_admit(10.0)
+    m.record_batch(3, 4, 0.5, now=11.0)
+    m.record_batch(1, 4, 0.5, now=12.0)
+    for lat in (0.1, 0.2, 0.3, 0.4):
+        m.record_completion(lat)
+    m.record_reject()
+    s = m.summary()
+    assert s["samples"] == 4 and s["batches"] == 2 and s["requests"] == 4
+    assert s["pad_waste"] == pytest.approx(0.5)  # 4 of 8 rows were padding
+    assert s["elapsed_s"] == pytest.approx(2.0)
+    assert s["samples_per_s"] == pytest.approx(2.0)
+    assert s["rejected"] == 1
+    assert s["latency_s"]["p50"] == pytest.approx(0.25)
+    assert s["latency_s"]["max"] == pytest.approx(0.4)
+    assert "p99" in s["latency_s"]
+
+
+def test_metrics_empty_summary():
+    s = ServeMetrics().summary()
+    assert s["pad_waste"] == 0.0 and s["samples_per_s"] == 0.0
+    assert s["latency_s"]["p50"] == 0.0
+
+
+# ----------------------------------------------------- engine: correctness
+
+def test_pad_and_mask_matches_unbatched(tiny_dcgan):
+    """Every admitted request's output is bitwise-equal to unbatched
+    generator_apply on its own latents — padding rows and co-batched
+    requests must not perturb a single bit."""
+    cfg, params = tiny_dcgan
+    eng = GanEngine(BucketPolicy(buckets=(1, 2, 4, 8), max_queue=64))
+    eng.register(cfg, params)
+    eng.warmup()
+
+    rng = np.random.default_rng(0)
+    reqs = [GenRequest("dcgan", _z(rng, n, cfg.z_dim))
+            for n in (1, 3, 2, 1, 4, 2, 1, 5)]
+    eng.serve(reqs)
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        ref = np.asarray(gan.generator_apply(params, cfg, jnp.asarray(r.z)))
+        assert r.output.shape == ref.shape
+        assert np.array_equal(np.asarray(r.output), ref), (
+            f"request {r.rid} (n={r.n}) diverged from unbatched generation"
+        )
+
+
+def test_multi_model_registry_shares_one_engine(tiny_dcgan):
+    """Two zoo generators served by the same engine, interleaved requests;
+    each output still bitwise-matches its own model's unbatched call."""
+    cfg_d, params_d = tiny_dcgan
+    cfg_g = _tiny(gan.GPGAN)
+    params_g = gan.generator_init(jax.random.key(1), cfg_g)
+
+    eng = GanEngine(BucketPolicy(buckets=(1, 2, 4), max_queue=64))
+    eng.register(cfg_d, params_d)
+    eng.register(cfg_g, params_g)
+    eng.warmup()
+
+    rng = np.random.default_rng(1)
+    reqs = []
+    for i in range(8):
+        name, cfg = (("dcgan", cfg_d), ("gpgan", cfg_g))[i % 2]
+        reqs.append(GenRequest(name, _z(rng, 1 + i % 3, cfg.z_dim)))
+    eng.serve(reqs)
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        cfg, params = ((cfg_d, params_d) if r.model == "dcgan"
+                       else (cfg_g, params_g))
+        ref = np.asarray(gan.generator_apply(params, cfg, jnp.asarray(r.z)))
+        assert np.array_equal(np.asarray(r.output), ref)
+
+
+def test_submit_validation(tiny_dcgan):
+    cfg, params = tiny_dcgan
+    eng = GanEngine(BucketPolicy(buckets=(1, 2), max_queue=16))
+    eng.register(cfg, params)
+    with pytest.raises(ValueError):                 # unknown model
+        eng.submit(GenRequest("nope", np.zeros((1, cfg.z_dim), np.float32)))
+    with pytest.raises(ValueError):                 # wrong z shape
+        eng.submit(GenRequest("dcgan", np.zeros((3,), np.float32)))
+    with pytest.raises(ValueError):                 # oversize request
+        eng.submit(GenRequest("dcgan", np.zeros((3, cfg.z_dim), np.float32)))
+    with pytest.raises(ValueError):                 # duplicate register
+        eng.register(cfg, params)
+
+
+def test_zero_row_request_rejected_at_admission(tiny_dcgan):
+    """A (0, z_dim) request must be refused at submit — admitted, it would
+    poison the queue head (no bucket holds 0 rows) and wedge the loop."""
+    cfg, params = tiny_dcgan
+    eng = GanEngine(BucketPolicy(buckets=(1, 2), max_queue=16))
+    eng.register(cfg, params)
+    with pytest.raises(ValueError):
+        eng.submit(GenRequest("dcgan", np.zeros((0, cfg.z_dim), np.float32)))
+    assert eng.queued_requests == 0
+    rng = np.random.default_rng(12)                 # engine still serves
+    ok = GenRequest("dcgan", _z(rng, 1, cfg.z_dim))
+    eng.serve([ok])
+    assert ok.done
+
+
+# ------------------------------------------------------- engine: fairness
+
+def test_fifo_order_within_model(tiny_dcgan):
+    """Single model: requests complete in submission order even when batch
+    formation groups them differently."""
+    cfg, params = tiny_dcgan
+    eng = GanEngine(BucketPolicy(buckets=(1, 2, 4), max_queue=64))
+    eng.register(cfg, params)
+    eng.warmup()
+    rng = np.random.default_rng(2)
+    reqs = [GenRequest("dcgan", _z(rng, n, cfg.z_dim))
+            for n in (1, 2, 1, 3, 1, 1, 2)]
+    eng.serve(reqs)
+    assert [r.rid for r in eng.completed] == sorted(r.rid for r in reqs)
+
+
+def test_fifo_fairness_across_models_serves_oldest_head_first(tiny_dcgan):
+    """Cross-model fairness: each dispatch serves the model whose head
+    request has waited longest — a busy model cannot starve a quiet one."""
+    cfg_d, params_d = tiny_dcgan
+    cfg_g = _tiny(gan.GPGAN)
+    params_g = gan.generator_init(jax.random.key(1), cfg_g)
+
+    clock = FakeClock()
+    eng = GanEngine(
+        BucketPolicy(buckets=(1, 2), max_wait_s=0.0, max_queue=64),
+        clock=clock,
+    )
+    eng.register(cfg_d, params_d)
+    eng.register(cfg_g, params_g)
+    eng.warmup()
+
+    rng = np.random.default_rng(3)
+    # dcgan floods at t=0,1,2; gpgan arrives at t=0.5 — it must be served
+    # right after the first dcgan batch, not after the whole flood
+    a0 = GenRequest("dcgan", _z(rng, 1, cfg_d.z_dim))
+    a1 = GenRequest("dcgan", _z(rng, 1, cfg_d.z_dim))
+    a2 = GenRequest("dcgan", _z(rng, 1, cfg_d.z_dim))
+    b0 = GenRequest("gpgan", _z(rng, 1, cfg_g.z_dim))
+    for t, r in [(0.0, a0), (0.0, a1), (0.5, b0), (2.0, a2)]:
+        clock.t = t
+        eng.submit(r)
+    while eng.step(drain=True):
+        pass
+    assert [r.rid for r in eng.completed] == [a0.rid, a1.rid, b0.rid, a2.rid]
+
+
+# ------------------------------------------------ engine: deadline flush
+
+def test_deadline_flushes_partial_batch(tiny_dcgan):
+    """A lone small request does not wait for a full bucket: the step loop
+    refuses to dispatch before max_wait_s and flushes right after it."""
+    cfg, params = tiny_dcgan
+    clock = FakeClock()
+    eng = GanEngine(
+        BucketPolicy(buckets=(1, 2, 4, 8), max_wait_s=0.25, max_queue=64),
+        clock=clock,
+    )
+    eng.register(cfg, params)
+    eng.warmup()
+
+    rng = np.random.default_rng(4)
+    r = GenRequest("dcgan", _z(rng, 2, cfg.z_dim))
+    eng.submit(r)
+    assert not eng.step()          # young partial batch: hold
+    clock.advance(0.1)
+    assert not eng.step()          # still under the deadline
+    clock.advance(0.2)             # 0.3s waited > 0.25s max_wait
+    assert eng.step()
+    assert r.done and eng.metrics.batches == 1
+    # padded into the smallest holding bucket, not the largest
+    assert eng.metrics.padded == 2 and eng.metrics.samples == 2
+
+
+def test_full_bucket_flushes_immediately(tiny_dcgan):
+    cfg, params = tiny_dcgan
+    clock = FakeClock()
+    eng = GanEngine(
+        BucketPolicy(buckets=(1, 2, 4), max_wait_s=999.0, max_queue=64),
+        clock=clock,
+    )
+    eng.register(cfg, params)
+    eng.warmup()
+    rng = np.random.default_rng(5)
+    for n in (2, 2):               # fills the max bucket exactly
+        eng.submit(GenRequest("dcgan", _z(rng, n, cfg.z_dim)))
+    assert eng.step()              # no deadline needed
+    assert eng.metrics.samples == 4 and eng.metrics.pad_waste == 0.0
+
+
+# ------------------------------------------------- engine: backpressure
+
+def test_backpressure_rejects_above_queue_bound(tiny_dcgan):
+    cfg, params = tiny_dcgan
+    clock = FakeClock()
+    eng = GanEngine(
+        BucketPolicy(buckets=(1, 2, 4), max_wait_s=999.0, max_queue=6),
+        clock=clock,
+    )
+    eng.register(cfg, params)
+    rng = np.random.default_rng(6)
+    eng.submit(GenRequest("dcgan", _z(rng, 4, cfg.z_dim)))
+    eng.submit(GenRequest("dcgan", _z(rng, 2, cfg.z_dim)))
+    overflow = GenRequest("dcgan", _z(rng, 1, cfg.z_dim))
+    with pytest.raises(QueueFull):
+        eng.submit(overflow)
+    assert overflow.rid == -1 and eng.queued_requests == 2
+    assert eng.metrics.rejected == 1
+    # draining frees the queue: the same request is admissible again
+    while eng.step(drain=True):
+        pass
+    eng.submit(overflow)
+    assert eng.queued_requests == 1
+
+
+# --------------------------------------------- engine: zero retraces
+
+def test_zero_retraces_after_warmup(tiny_dcgan, tconv_trace_counter):
+    """The tentpole invariant: after warmup, a mixed-size request stream
+    causes ZERO new layer traces (every bucket's plan traced exactly once)
+    and the engine's trace-time recompile counter stays frozen."""
+    cfg, params = tiny_dcgan
+    eng = GanEngine(BucketPolicy(buckets=(1, 2, 4, 8), max_queue=256))
+    eng.register(cfg, params)
+    eng.warmup()
+
+    # warmup traced each (bucket, layer) plan exactly once
+    assert eng.warmup_recompiles == 4              # one executable per bucket
+    assert len(tconv_trace_counter) == 4 * len(cfg.layers)
+    assert all(c == 1 for c in tconv_trace_counter.values())
+    warm = dict(tconv_trace_counter)
+
+    rng = np.random.default_rng(7)
+    for _ in range(3):             # several waves of mixed-size traffic
+        reqs = [GenRequest("dcgan", _z(rng, 1 + int(n), cfg.z_dim))
+                for n in rng.integers(0, 8, size=9)]
+        eng.serve(reqs)
+        assert all(r.done for r in reqs)
+
+    assert tconv_trace_counter == warm, "steady-state serving retraced"
+    assert eng.metrics.recompiles == eng.warmup_recompiles
+
+
+def test_unwarmed_engine_compiles_inline_and_counts_it(tiny_dcgan):
+    """Skipping warmup still serves correctly — the recompile counter is
+    how the metrics surface the inline compile cost."""
+    cfg, params = tiny_dcgan
+    eng = GanEngine(BucketPolicy(buckets=(1, 2), max_queue=16))
+    eng.register(cfg, params)
+    assert eng.metrics.recompiles == 0
+    rng = np.random.default_rng(8)
+    reqs = [GenRequest("dcgan", _z(rng, 2, cfg.z_dim))]
+    eng.serve(reqs)
+    assert reqs[0].done
+    assert eng.metrics.recompiles == 1             # paid inline, visible
+    eng.serve([GenRequest("dcgan", _z(rng, 2, cfg.z_dim))])
+    assert eng.metrics.recompiles == 1             # second hit: cached
+
+
+# ---------------------------------------------------------- replay mode
+
+def test_replay_serves_trace_to_completion(tiny_dcgan):
+    cfg, params = tiny_dcgan
+    eng = GanEngine(
+        BucketPolicy(buckets=(1, 2, 4), max_wait_s=0.002, max_queue=64)
+    )
+    eng.register(cfg, params)
+    eng.warmup()
+    rng = np.random.default_rng(9)
+    reqs = [GenRequest("dcgan", _z(rng, 1 + i % 2, cfg.z_dim))
+            for i in range(6)]
+    arrivals = [i * 1e-3 for i in range(6)]
+    eng.replay(reqs, arrivals)
+    assert all(r.done for r in reqs)
+    assert eng.metrics.requests == 6
+
+
+def test_replay_sheds_load_under_backpressure(tiny_dcgan):
+    """QueueFull during replay drops the one rejected request (counted in
+    metrics) and keeps serving the rest of the trace — a hot burst must not
+    abort the whole replay."""
+    cfg, params = tiny_dcgan
+    eng = GanEngine(
+        BucketPolicy(buckets=(1, 2), max_wait_s=999.0, max_queue=2)
+    )
+    eng.register(cfg, params)
+    eng.warmup()
+    rng = np.random.default_rng(11)
+    reqs = [GenRequest("dcgan", _z(rng, 1, cfg.z_dim)) for _ in range(6)]
+    eng.replay(reqs, [0.0] * 6)        # burst into a 2-sample queue bound
+    served = [r for r in reqs if r.done]
+    assert eng.metrics.rejected == 6 - len(served) > 0
+    assert eng.metrics.requests == len(served)
+
+
+def test_replay_rejects_unsorted_arrivals(tiny_dcgan):
+    cfg, params = tiny_dcgan
+    eng = GanEngine(BucketPolicy(buckets=(1, 2), max_queue=16))
+    eng.register(cfg, params)
+    rng = np.random.default_rng(10)
+    reqs = [GenRequest("dcgan", _z(rng, 1, cfg.z_dim)) for _ in range(2)]
+    with pytest.raises(ValueError):
+        eng.replay(reqs, [0.2, 0.1])

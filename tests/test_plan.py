@@ -446,3 +446,46 @@ def test_make_train_step_threads_plan():
     params2, opt_state2, metrics = step(params, opt_state, z)
     assert seen and all(p is plan for p in seen)
     assert jnp.isfinite(metrics["loss"])
+
+
+# ------------------------------------------------------ bucketed compilation
+
+def test_compile_plan_buckets_matches_per_batch_compile():
+    """One plan per bucket, each identical in value to a direct
+    compile_plan at that batch (same epilogues, same resolution)."""
+    cfg = _tiny(gan.DCGAN)
+    epis = gan.generator_epilogues(cfg)
+    plans = planlib.compile_plan_buckets(cfg, (4, 1, 2, 2), epilogues=epis)
+    assert sorted(plans) == [1, 2, 4]            # duplicates collapse, sorted
+    for b, plan in plans.items():
+        ref = planlib.compile_plan(cfg, b, epilogues=epis)
+        assert plan.name == ref.name
+        assert plan.layers == ref.layers
+        assert all(lp.batch == b for lp in plan.layers)
+
+
+def test_compile_plan_buckets_memoizes_layer_resolution(monkeypatch):
+    """Bucket compilation resolves through plan_layer_cached: a second call
+    in the same cache generation does zero fresh plan_layer work."""
+    cfg = _tiny(gan.DCGAN)
+    planlib.compile_plan_buckets(cfg, (1, 2))    # prime the memo
+    calls = []
+    orig = planlib.plan_layer
+
+    def spy(*a, **kw):
+        calls.append(a)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(planlib, "plan_layer", spy)
+    planlib.compile_plan_buckets(cfg, (1, 2))
+    assert calls == []                           # pure memo hits
+    planlib.compile_plan_buckets(cfg, (1, 2, 4))
+    assert len(calls) == len(cfg.layers)         # only the new bucket
+
+
+def test_compile_plan_buckets_validation():
+    cfg = _tiny(gan.DCGAN)
+    with pytest.raises(ValueError):
+        planlib.compile_plan_buckets(cfg, (0, 2))
+    with pytest.raises(ValueError):
+        planlib.compile_plan_buckets(cfg, (2,), epilogues=(None,))
