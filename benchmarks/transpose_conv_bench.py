@@ -32,6 +32,15 @@ clock on TPU; the roofline models — whose unfused side pays the extra
 output-map round trip — on CPU). ``--check`` gates fused <= 1.05x unfused
 on every layer.
 
+An ``implicit_gemm`` section compares the implicit-GEMM forward kernel
+against the incumbent best Pallas forward per zoo layer at the serving
+batch (``GEMM_SERVING_BATCH``), wall clock on TPU and by the roofline
+models on CPU. ``--check`` gates ``gemm_vs_incumbent >= GEMM_SPEEDUP_MIN``
+on every **head** layer (channel-deep, small-spatial: ``cin >= 256`` and
+``b*m*m <= 512``) and that the ``auto`` dispatch wall on those layers stays
+within noise of the explicitly-pinned method it resolves to — the
+kernel-zoo growth must never regress dispatch.
+
 Additionally a ``plan_dispatch`` section records **plan-vs-legacy dispatch
 overhead** on a reduced DCGAN generator: wall time of N repeated generator
 calls through a pre-compiled :class:`repro.kernels.plan.TconvPlan` versus
@@ -251,6 +260,158 @@ def bench_epilogue_fusion(models, *, repeats, warmup) -> dict:
     return {"tolerance": EPILOGUE_FUSION_TOLERANCE, "layers": rows}
 
 
+# implicit-GEMM forward vs the incumbent phase-segregated kernels at the
+# serving batch. The gate only fires on "head" layers — channel-deep,
+# small-spatial shapes where the GEMM formulation's batch-amortized weight
+# traffic wins the roofline despite its ~4x dense MACs. Elsewhere the rows
+# are recorded for the trajectory but never gated (the segregated kernels
+# are expected to win spatially-large layers).
+GEMM_SERVING_BATCH = 8
+GEMM_SPEEDUP_MIN = 1.15
+GEMM_HEAD_MIN_CIN = 256
+GEMM_HEAD_MAX_ROWS = 512  # b * m_out * m_out at the serving batch
+
+
+def bench_implicit_gemm(models, *, repeats, warmup) -> dict:
+    """Implicit-GEMM vs incumbent Pallas forwards at the serving batch.
+
+    Per Table-4 zoo layer at ``GEMM_SERVING_BATCH``: the best implicit-GEMM
+    tile variant vs the incumbent best (min of the fused and per-phase
+    kernels) and the lax ``auto`` dispatch. On TPU all three are
+    wall-clocked; on CPU the Pallas kernels compare by their roofline
+    models (the same backend-honest convention as the forward section).
+
+    ``--check`` gates two things: on every **head** layer
+    (``cin >= GEMM_HEAD_MIN_CIN`` and ``b*m*m <= GEMM_HEAD_MAX_ROWS``) the
+    implicit-GEMM kernel must beat the incumbent by at least
+    ``GEMM_SPEEDUP_MIN``; and on head layers the ``auto`` dispatch wall must
+    stay within PLAN_DISPATCH_TOLERANCE of the explicitly-pinned method it
+    resolves to — i.e. growing the kernel zoo never regresses the dispatch
+    the zoo layers actually run through.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import segregation as seg
+    from repro.core import transpose_conv2d
+    from repro.kernels import autotune
+    from repro.models.gan import GAN_ZOO
+
+    b = GEMM_SERVING_BATCH
+    on_tpu = jax.default_backend() == "tpu"
+    rows = []
+    for name in models:
+        cfg = GAN_ZOO[name]
+        for i, (hw, cin, cout) in enumerate(cfg.layers):
+            m_out = seg.output_size(hw, cfg.kernel, cfg.padding)
+            n_rows = b * m_out * m_out
+            head = cin >= GEMM_HEAD_MIN_CIN and n_rows <= GEMM_HEAD_MAX_ROWS
+            gemm_s, gemm_tiles = autotune.best_gemm_proxy(
+                b, hw, cfg.kernel, cin, cout, cfg.padding
+            )
+            fused_s, (tile_h, tile_w) = autotune.best_fused_proxy(
+                b, hw, cfg.kernel, cin, cout, cfg.padding
+            )
+            phase_s = autotune.roofline_proxy(
+                "pallas_phase", b, hw, cfg.kernel, cin, cout, cfg.padding
+            )
+            if on_tpu:
+                from repro.kernels.transpose_conv2d import (
+                    transpose_conv2d_pallas, transpose_conv2d_pallas_phase,
+                )
+                from repro.kernels.transpose_conv2d_gemm import (
+                    transpose_conv2d_pallas_gemm,
+                )
+
+                x = jax.random.normal(jax.random.key(i), (b, hw, hw, cin))
+                k = jax.random.normal(
+                    jax.random.key(i + 1), (cfg.kernel,) * 2 + (cin, cout)
+                ) * 0.05
+                gemm_s = time_fn(
+                    jax.jit(lambda x, k: transpose_conv2d_pallas_gemm(
+                        x, k, cfg.padding, tile_m=gemm_tiles[0],
+                        tile_n=gemm_tiles[1], tile_k=gemm_tiles[2],
+                    )), x, k, repeats=repeats, warmup=warmup,
+                )
+                fused_s = time_fn(
+                    jax.jit(lambda x, k: transpose_conv2d_pallas(
+                        x, k, cfg.padding, tile_h=tile_h, tile_w=tile_w,
+                    )), x, k, repeats=repeats, warmup=warmup,
+                )
+                phase_s = time_fn(
+                    jax.jit(lambda x, k: transpose_conv2d_pallas_phase(
+                        x, k, cfg.padding,
+                    )), x, k, repeats=repeats, warmup=warmup,
+                )
+                source = "wall"
+            else:
+                source = "proxy"
+            incumbent_s = min(fused_s, phase_s)
+            row = {
+                "model": name,
+                "layer": f"{hw}x{hw}x{cin}",
+                "batch": b,
+                "rows": n_rows,
+                "head": head,
+                "source": source,
+                "gemm_tile": list(gemm_tiles),
+                "gemm_s": gemm_s,
+                "incumbent_s": incumbent_s,
+                "gemm_vs_incumbent": incumbent_s / gemm_s,
+            }
+            if head:
+                # dispatch-regression guard: ``auto`` (whose method
+                # universe this PR grew) vs the method it resolves to,
+                # wall clock at the serving batch. Head layers are tiny,
+                # so this stays cheap even on CPU — and on CPU the
+                # resolver must never pick a Pallas kernel at all.
+                from repro.kernels import plan as planlib
+
+                lp = planlib.plan_layer(
+                    b, hw, cfg.kernel, cin, cout, cfg.padding
+                )
+                x = jax.random.normal(jax.random.key(i), (b, hw, hw, cin))
+                k = jax.random.normal(
+                    jax.random.key(i + 1), (cfg.kernel,) * 2 + (cin, cout)
+                ) * 0.05
+                resolved_fn = jax.jit(
+                    lambda x, k, _m=lp.method: transpose_conv2d(
+                        x, k, cfg.padding, method=_m
+                    )
+                )
+                auto_fn = jax.jit(
+                    lambda x, k: transpose_conv2d(
+                        x, k, cfg.padding, method="auto"
+                    )
+                )
+                # interleave the two sides and keep per-side minima: both
+                # run byte-identical compiled code, so alternating trials
+                # cancels machine-load drift that back-to-back timing
+                # blocks would attribute to one side
+                import time as _time
+
+                resolved_fn(x, k).block_until_ready()
+                auto_fn(x, k).block_until_ready()
+                resolved_s = auto_s = float("inf")
+                for _ in range(max(repeats, 5)):
+                    t0 = _time.perf_counter()
+                    resolved_fn(x, k).block_until_ready()
+                    resolved_s = min(resolved_s, _time.perf_counter() - t0)
+                    t0 = _time.perf_counter()
+                    auto_fn(x, k).block_until_ready()
+                    auto_s = min(auto_s, _time.perf_counter() - t0)
+                row["resolved_method"] = lp.method
+                row["resolved_s"] = resolved_s
+                row["auto_s"] = auto_s
+            rows.append(row)
+    return {
+        "serving_batch": b,
+        "speedup_min": GEMM_SPEEDUP_MIN,
+        "head_min_cin": GEMM_HEAD_MIN_CIN,
+        "head_max_rows": GEMM_HEAD_MAX_ROWS,
+        "layers": rows,
+    }
+
+
 # plan dispatch may not beat legacy by more than measurement noise on a
 # loaded CI runner; the gate only guards against the plan path REGRESSING
 # dispatch overhead
@@ -361,6 +522,9 @@ def run(quick: bool = False) -> dict:
     out["epilogue_fusion"] = bench_epilogue_fusion(
         models, repeats=repeats, warmup=warmup
     )
+    out["implicit_gemm"] = bench_implicit_gemm(
+        models, repeats=repeats, warmup=warmup
+    )
     out["plan_dispatch"] = bench_plan_dispatch(
         calls=10 if quick else 30, repeats=2 if quick else 3
     )
@@ -372,8 +536,10 @@ def check(result: dict) -> list[str]:
     beat the per-phase grid AND the segregated Pallas backward must beat
     the lax VJP; the fused epilogue must cost at most
     EPILOGUE_FUSION_TOLERANCE x the unfused kernel-plus-post-ops spelling;
-    and the compiled-plan dispatch path must be no slower than legacy auto
-    dispatch (within noise tolerance)."""
+    the implicit-GEMM kernel must beat the incumbent by GEMM_SPEEDUP_MIN on
+    every head layer at the serving batch without regressing ``auto``
+    dispatch; and the compiled-plan dispatch path must be no slower than
+    legacy auto dispatch (within noise tolerance)."""
     bad = []
     for name, model in result["models"].items():
         for row in model["layers"]:
@@ -394,6 +560,23 @@ def check(result: dict) -> list[str]:
                 f"fused_s={row['fused_s']:.3g} > "
                 f"{EPILOGUE_FUSION_TOLERANCE}x unfused_s="
                 f"{row['unfused_s']:.3g}"
+            )
+    ig = result.get("implicit_gemm", {})
+    for row in ig.get("layers", []):
+        if not row["head"]:
+            continue  # trajectory-only: segregated kernels own these layers
+        if row["gemm_vs_incumbent"] < GEMM_SPEEDUP_MIN:
+            bad.append(
+                f"implicit_gemm {row['model']}/{row['layer']}: "
+                f"gemm_vs_incumbent={row['gemm_vs_incumbent']:.3f} < "
+                f"{GEMM_SPEEDUP_MIN}"
+            )
+        if row["auto_s"] > row["resolved_s"] * PLAN_DISPATCH_TOLERANCE:
+            bad.append(
+                f"implicit_gemm {row['model']}/{row['layer']}: "
+                f"auto_s={row['auto_s']:.3g} > {PLAN_DISPATCH_TOLERANCE}x "
+                f"resolved {row['resolved_method']}="
+                f"{row['resolved_s']:.3g}"
             )
     # only the EAGER mode is gated: that's where the plan path removes real
     # per-call dispatch work. In jit mode both sides run byte-identical
@@ -446,6 +629,15 @@ def main(argv=None):
         print(f"epilogue_fusion: {len(ef)} layers ({ef[0]['source']}), "
               f"worst fused_vs_unfused x{worst['fused_vs_unfused']:.3f} "
               f"({worst['model']}/{worst['layer']}[{worst['epilogue']}])")
+    ig = result.get("implicit_gemm", {}).get("layers", [])
+    heads = [r for r in ig if r["head"]]
+    if heads:
+        worst = min(heads, key=lambda r: r["gemm_vs_incumbent"])
+        print(f"implicit_gemm: {len(ig)} layers at batch "
+              f"{result['implicit_gemm']['serving_batch']} "
+              f"({ig[0]['source']}), {len(heads)} head, worst head "
+              f"gemm_vs_incumbent x{worst['gemm_vs_incumbent']:.3f} "
+              f"({worst['model']}/{worst['layer']})")
     pd = result.get("plan_dispatch", {})
     for mode in ("eager", "jit"):
         if mode in pd:
@@ -459,8 +651,9 @@ def main(argv=None):
             raise SystemExit(1)
     elif args.check:
         print("# check ok: fused >= per-phase, pallas bwd >= lax bwd, "
-              "fused epilogue <= 1.05x unfused on every layer, and plan "
-              "dispatch <= legacy auto dispatch")
+              "fused epilogue <= 1.05x unfused on every layer, implicit "
+              "gemm >= 1.15x incumbent on head layers, and plan dispatch "
+              "<= legacy auto dispatch")
 
 
 if __name__ == "__main__":

@@ -326,7 +326,7 @@ def transpose_conv2d(
 
     epi = epilib.make(bias, act)
     if plan is None and method in (
-        "auto", "pallas", "pallas_fused", "pallas_phase"
+        "auto", "pallas", "pallas_fused", "pallas_phase", "pallas_gemm"
     ):
         from repro.kernels import plan as planlib
 
@@ -384,7 +384,7 @@ def _transpose_conv2d_jit(
     except KeyError:
         raise ValueError(
             f"unknown method {method!r}; one of {sorted(METHODS)}, "
-            "'pallas'/'pallas_fused', or 'pallas_phase'"
+            "'pallas'/'pallas_fused', 'pallas_phase', or 'pallas_gemm'"
         )
     y = fn(x, kernel, padding, precision=precision)
     from repro.kernels import epilogue as epilib

@@ -1,3 +1,42 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the unified kernel-segregated transpose conv.
+
+The one import surface for the kernel zoo — ``from repro.kernels import
+...`` re-exports every forward/backward kernel entry point plus the fused
+:class:`~repro.kernels.epilogue.Epilogue`:
+
+* :func:`transpose_conv2d_pallas` — phase-fused, spatially-tiled forward
+  (the primary segregated kernel; VMEM bounded in N);
+* :func:`transpose_conv2d_pallas_phase` — legacy per-phase grid (the
+  autotuner's baseline candidate);
+* :func:`transpose_conv2d_pallas_gemm` — implicit-GEMM forward for the
+  channel-deep, small-spatial regime (batch folds into the GEMM rows);
+* :func:`transpose_conv2d_bwd_pallas` — segregated dx + dw backward;
+* :func:`Epilogue` — the fused bias+activation tail shared by all of them.
+
+Differentiable dispatch (custom VJPs), the autotuner, and the plan
+subsystem live in the submodules (:mod:`repro.kernels.ops`,
+:mod:`repro.kernels.autotune`, :mod:`repro.kernels.plan`) and are still
+imported as submodules — importing this package does not stat the
+autotune cache or build any plan.
+"""
+from repro.kernels.epilogue import Epilogue
+from repro.kernels.transpose_conv2d import (
+    default_tiles,
+    transpose_conv2d_pallas,
+    transpose_conv2d_pallas_phase,
+)
+from repro.kernels.transpose_conv2d_bwd import transpose_conv2d_bwd_pallas
+from repro.kernels.transpose_conv2d_gemm import (
+    default_gemm_tiles,
+    transpose_conv2d_pallas_gemm,
+)
+
+__all__ = [
+    "Epilogue",
+    "default_gemm_tiles",
+    "default_tiles",
+    "transpose_conv2d_bwd_pallas",
+    "transpose_conv2d_pallas",
+    "transpose_conv2d_pallas_gemm",
+    "transpose_conv2d_pallas_phase",
+]

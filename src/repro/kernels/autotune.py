@@ -37,14 +37,19 @@ Components:
   v2 cache files migrate on load** (v1 flat entries become the ``fwd``
   direction; v2 keys gain the ``e:none`` epilogue component — tuned tiles
   survive both hops) and are rewritten as v3 on the next save; unknown
-  versions are ignored (and set aside, never clobbered, on save).
+  versions are ignored (and set aside, never clobbered, on save), and v3
+  records whose recorded winner method this build cannot dispatch (written
+  by a NEWER checkout — e.g. a kernel this build predates) are likewise
+  set aside on load: excluded from every lookup, merged back verbatim on
+  save (see :func:`known_winner_methods`).
   ``--prune`` (or :func:`prune_cache`) drops entries whose key no longer
   parses under the current schema instead of carrying them forever.
 * :func:`best_method` / :func:`best_bwd` / :func:`best_entry` — cache-only
   consults used at trace time by ``transpose_conv_auto`` (fwd/step) and the
   custom VJP in ``repro.kernels.ops`` (bwd). A miss falls back to the old
   heuristic (cold-cache behaviour is unchanged).
-* :func:`roofline_proxy` / :func:`bwd_roofline_proxy` — analytic
+* :func:`roofline_proxy` / :func:`gemm_roofline_proxy` /
+  :func:`bwd_roofline_proxy` — analytic
   ``max(flops/peak_flops, bytes/peak_bw)`` seconds for the Pallas grids and
   their lax counterparts. The lax-based candidates always race on wall
   clock. The Pallas kernels race on wall clock only on a real accelerator
@@ -97,13 +102,20 @@ _KEY_RE = re.compile(
     r"\|[A-Za-z0-9_.]+\|e:[A-Za-z0-9.+_-]+$"
 )
 # in-memory cache state; "generation" bumps whenever entries change (record,
-# clear, reload-from-disk) so 'auto' dispatch can retrace (see generation())
+# clear, reload-from-disk) so 'auto' dispatch can retrace (see generation()).
+# "alien" holds v3 records whose winner method this build doesn't know
+# (written by a newer checkout): excluded from every lookup, merged back
+# verbatim on save — set aside, never served, never clobbered.
 _STATE: dict[str, Any] = {
-    "path": None, "mtime": -1.0, "entries": {}, "generation": 0,
+    "path": None, "mtime": -1.0, "entries": {}, "alien": {}, "generation": 0,
 }
 
 # Spatial-tile variants raced for the fused forward Pallas kernel.
 _FUSED_TILES = ((8, 128), (16, 128), (8, 64), (32, 32))
+# (tile_m, tile_n, tile_k) variants raced for the implicit-GEMM forward
+# (per shape they are clamped/deduped by _gemm_tile_variants).
+_GEMM_TILES = ((128, 128, 512), (256, 128, 512), (512, 128, 512),
+               (256, 128, 256))
 # dx spatial-tile variants raced for the Pallas backward (dw races its
 # default reduction tile; the dx grid dominates the backward traffic).
 _BWD_TILES = ((8, 128), (16, 128), (8, 64), (32, 32))
@@ -143,6 +155,46 @@ def _migrate_key(key: str) -> str:
     return key if "|e:" in key else key + "|e:none"
 
 
+def known_winner_methods(direction: str = "fwd") -> frozenset:
+    """Winner-method names THIS build can dispatch for ``direction``.
+
+    The forward-compat boundary: a v3 cache written by a newer checkout may
+    record winners this build has no kernel for — those records are set
+    aside on load (see :func:`_load`) instead of crashing dispatch or being
+    clobbered on the next save.
+    """
+    if direction == "bwd":
+        return frozenset(BWD_CANDIDATES)
+    from repro.core import transpose_conv as tc
+
+    return frozenset(
+        (set(tc.METHODS) - {"auto"}) | set(PALLAS_CANDIDATES) | {"pallas"}
+    )
+
+
+def _record_is_native(rec) -> bool:
+    """True iff every direction's recorded winner is dispatchable here."""
+    if not isinstance(rec, dict):
+        return False
+    for d in _DIRECTIONS:
+        e = rec.get(d)
+        if (
+            isinstance(e, dict)
+            and e.get("method") is not None
+            and e["method"] not in known_winner_methods(d)
+        ):
+            return False
+    return True
+
+
+def _partition_native(entries: dict) -> tuple[dict, dict]:
+    """Split loaded entries into (native, alien-set-aside)."""
+    native, alien = {}, {}
+    for k, rec in entries.items():
+        (native if _record_is_native(rec) else alien)[k] = rec
+    return native, alien
+
+
 def _load() -> dict:
     """Reload the persistent cache if the file changed since last read.
 
@@ -151,7 +203,7 @@ def _load() -> dict:
     """
     path = cache_path()
     if _STATE["path"] != str(path):
-        _STATE.update(path=str(path), mtime=-1.0, entries={})
+        _STATE.update(path=str(path), mtime=-1.0, entries={}, alien={})
         _STATE["generation"] += 1
     try:
         st = path.stat()
@@ -164,19 +216,23 @@ def _load() -> dict:
             if not isinstance(blob, dict):
                 blob = {}  # valid JSON but not a cache: treat as foreign
             if blob.get("version") == _CACHE_VERSION:
-                _STATE["entries"] = blob.get("entries", {})
+                loaded = blob.get("entries", {})
             elif blob.get("version") in (1, 2):
                 # older schemas migrate in place — none of the tuned data is
                 # lost: v1 flat entries become the fwd direction, and
                 # v1/v2 keys (which predate epilogue'd signatures) become
                 # the e:none signature of v3. The next _save() rewrites the
                 # file as v3.
-                _STATE["entries"] = {
+                loaded = {
                     _migrate_key(k): _normalize(dict(e))
                     for k, e in blob.get("entries", {}).items()
                 }
             else:  # foreign version: don't pin stale entries as current
-                _STATE["entries"] = {}
+                loaded = {}
+            # forward compat WITHIN v3: records whose winner method this
+            # build can't dispatch (written by a newer checkout) are set
+            # aside — never served by lookup(), merged back on save
+            _STATE["entries"], _STATE["alien"] = _partition_native(loaded)
             _STATE["generation"] += 1
         except (json.JSONDecodeError, OSError):
             pass  # corrupt/unreadable cache: keep the in-memory view
@@ -194,7 +250,13 @@ def _save() -> None:
             path.replace(path.with_name(path.name + f".v{ver}.bak"))
     except (json.JSONDecodeError, OSError):
         pass  # corrupt/missing cache: overwriting it loses nothing
-    blob = {"version": _CACHE_VERSION, "entries": _STATE["entries"]}
+    # alien (newer-build) records ride along untouched; a key this build
+    # re-tuned overrides its set-aside version (last write wins, as between
+    # concurrent same-version tuners)
+    blob = {
+        "version": _CACHE_VERSION,
+        "entries": {**_STATE["alien"], **_STATE["entries"]},
+    }
     fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
     try:
         with os.fdopen(fd, "w") as f:
@@ -240,7 +302,7 @@ def record(
 
 
 def clear_cache(*, memory_only: bool = False) -> None:
-    _STATE.update(mtime=-1.0, entries={})
+    _STATE.update(mtime=-1.0, entries={}, alien={})
     _STATE["generation"] += 1
     if not memory_only:
         try:
@@ -393,6 +455,101 @@ def best_fused_proxy(
     return best
 
 
+def _gemm_tile_variants(
+    b: int, n_in: int, n_k: int, padding: int, cin: int, cout: int,
+) -> tuple:
+    """Shape-feasible (tile_m, tile_n, tile_k) variants for the gemm race.
+
+    The kernel's own default leads; the static variant list is clamped to
+    the padded row count and snapped to divisors of Cout/Cin (the kernel
+    rejects non-dividing channel tiles), then deduped preserving order —
+    so the race order is deterministic.
+    """
+    from repro.kernels.transpose_conv2d_gemm import default_gemm_tiles
+
+    m = seg.output_size(n_in, n_k, padding)
+    rows_cap = -(-b * m * m // 8) * 8  # sublane-rounded GEMM rows
+    out: list = []
+    base = default_gemm_tiles(b, n_in, n_k, padding, cin, cout)
+    for tm, tn, tk in (base,) + _GEMM_TILES:
+        tm = min(tm, rows_cap)
+        tn = tn if cout % tn == 0 else cout
+        tk = tk if cin % tk == 0 else cin
+        if (tm, tn, tk) not in out:
+            out.append((tm, tn, tk))
+    return tuple(out)
+
+
+def gemm_roofline_proxy(
+    b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int = 0,
+    *, tile_m: int | None = None, tile_n: int | None = None,
+    tile_k: int | None = None, dtype_bytes: int = 4, epilogue=None,
+    fuse_epilogue: bool = True,
+) -> float:
+    """Analytic seconds for the implicit-GEMM forward: max(compute, HBM).
+
+    Models the kernel's actual grid ``(n_m, n_co, n_ci * n_tap)``:
+
+    * compute — the dense flat GEMM over the sublane-padded ``B*M*M`` rows
+      (no parity skip: ~4x the segregated MACs for even kernels) PLUS the
+      one-hot gather matmul that reconstructs each ``(tile_m, tile_k)``
+      slab from the resident input plane (``2*tm*S*tk`` MACs per step,
+      ``S = B*N*N``) — the price of doing the irregular addressing on the
+      MXU;
+    * HBM — the input plane once per ``(m, cout, cin)`` block (taps are
+      the fast k axis, so consecutive tap steps reuse the resident plane),
+      the full dense weight once per m-tile (THE structural win: the
+      phase grids re-fetch the weight stack once per batch item, here
+      batch folds into the GEMM rows), and the fp32 out blocks under the
+      same conservative write+read-back-per-k-step convention the other
+      forward models use.
+    """
+    from repro.kernels.transpose_conv2d_gemm import default_gemm_tiles
+
+    m = seg.output_size(n_in, n_k, padding)
+    rows = b * m * m
+    dtm, dtn, dtk = default_gemm_tiles(b, n_in, n_k, padding, cin, cout)
+    tm = min(tile_m or dtm, -(-rows // 8) * 8)
+    tn = tile_n or dtn
+    tk = tile_k or dtk
+    n_m = -(-rows // tm)
+    rows_pad = n_m * tm
+    n_co = -(-cout // tn)
+    n_ci = -(-cin // tk)
+    n_tap = n_k * n_k
+    ksteps = n_tap * n_ci
+    s_plane = b * n_in * n_in
+    flops = 2 * rows_pad * n_tap * cin * cout          # dense flat GEMM
+    flops += 2 * rows_pad * n_co * n_tap * s_plane * cin  # one-hot gather
+    epi = epilib.canonical(epilogue)
+    epi_bytes = 0
+    if epi is not None:
+        flops += (int(epi.bias) + int(epi.act != "none")) * b * m * m * cout
+        if not fuse_epilogue:
+            epi_bytes = epilogue_postop_bytes(b, m, cout)
+    in_b = n_m * n_co * n_ci * s_plane * tk * dtype_bytes
+    w_b = n_m * n_tap * cin * cout * dtype_bytes
+    out_b = rows_pad * cout * (2 * ksteps - 1) * 4
+    bytes_moved = in_b + w_b + out_b + epi_bytes
+    return max(flops / PEAK_FLOPS, bytes_moved / PEAK_BW)
+
+
+def best_gemm_proxy(
+    b: int, n_in: int, n_k: int, cin: int, cout: int, padding: int = 0,
+    *, dtype_bytes: int = 4,
+) -> tuple[float, tuple[int, int, int]]:
+    """Best (seconds, (tile_m, tile_n, tile_k)) over the gemm variants."""
+    best = None
+    for tm, tn, tk in _gemm_tile_variants(b, n_in, n_k, padding, cin, cout):
+        t = gemm_roofline_proxy(
+            b, n_in, n_k, cin, cout, padding,
+            tile_m=tm, tile_n=tn, tile_k=tk, dtype_bytes=dtype_bytes,
+        )
+        if best is None or t < best[0]:
+            best = (t, (tm, tn, tk))
+    return best
+
+
 def bwd_roofline_proxy(
     method: str, b: int, n_in: int, n_k: int, cin: int, cout: int,
     padding: int = 0, *, tile_h: int | None = None, tile_w: int | None = None,
@@ -501,7 +658,7 @@ def best_bwd_proxy(
 LAX_CANDIDATES = (
     "conventional", "unified_reshape", "unified_matmul", "unified_fused",
 )
-PALLAS_CANDIDATES = ("pallas_fused", "pallas_phase")
+PALLAS_CANDIDATES = ("pallas_fused", "pallas_phase", "pallas_gemm")
 DEFAULT_CANDIDATES = LAX_CANDIDATES + PALLAS_CANDIDATES
 BWD_CANDIDATES = ("lax", "pallas")
 
@@ -526,6 +683,9 @@ def _tune_fwd(
     from repro.kernels.transpose_conv2d import (
         transpose_conv2d_pallas, transpose_conv2d_pallas_phase,
     )
+    from repro.kernels.transpose_conv2d_gemm import (
+        transpose_conv2d_pallas_gemm,
+    )
 
     b, n_in, _, cin = x.shape
     n_k, cout = k.shape[0], k.shape[3]
@@ -539,6 +699,9 @@ def _tune_fwd(
     fused_s, (tile_h, tile_w) = best_fused_proxy(
         b, n_in, n_k, cin, cout, padding, dtype_bytes=itemsize
     )
+    _, gemm_tiles = best_gemm_proxy(
+        b, n_in, n_k, cin, cout, padding, dtype_bytes=itemsize
+    )
     proxy = {
         "pallas_fused": roofline_proxy(
             "pallas_fused", b, n_in, n_k, cin, cout, padding,
@@ -548,6 +711,11 @@ def _tune_fwd(
         "pallas_phase": roofline_proxy(
             "pallas_phase", b, n_in, n_k, cin, cout, padding,
             dtype_bytes=itemsize, epilogue=epi,
+        ),
+        "pallas_gemm": gemm_roofline_proxy(
+            b, n_in, n_k, cin, cout, padding,
+            tile_m=gemm_tiles[0], tile_n=gemm_tiles[1],
+            tile_k=gemm_tiles[2], dtype_bytes=itemsize, epilogue=epi,
         ),
     }
     if epi is not None:
@@ -592,6 +760,25 @@ def _tune_fwd(
                         jax.jit(unfused), *args,
                         repeats=repeats, warmup=warmup,
                     )
+            elif name == "pallas_gemm":
+                # race the feasible (tile_m, tile_n, tile_k) variants
+                times = {}
+                for tmv, tnv, tkv in _gemm_tile_variants(
+                    b, n_in, n_k, padding, cin, cout
+                ):
+                    times[(tmv, tnv, tkv)] = _time_fn(
+                        jax.jit(
+                            lambda *a, _tm=tmv, _tn=tnv, _tk=tkv:
+                            transpose_conv2d_pallas_gemm(
+                                a[0], a[1], padding, tile_m=_tm,
+                                tile_n=_tn, tile_k=_tk, epilogue=epi,
+                                bias=a[2] if len(a) > 2 else None,
+                            )
+                        ),
+                        *args, repeats=repeats, warmup=warmup,
+                    )
+                gemm_tiles, best = min(times.items(), key=lambda kv: kv[1])
+                candidates[name] = best
             else:
                 candidates[name] = _time_fn(
                     jax.jit(
@@ -619,7 +806,9 @@ def _tune_fwd(
         entry["tile_h"], entry["tile_w"] = tile_h, tile_w
         if epi is not None:
             entry["fuse_epilogue"] = fuse_epi
-    return entry, (tile_h, tile_w)
+    elif winner_method == "pallas_gemm":
+        entry["tile_m"], entry["tile_n"], entry["tile_k"] = gemm_tiles
+    return entry, (tile_h, tile_w), gemm_tiles
 
 
 def _tune_bwd(x, k, bvec, padding, include_pallas, repeats, warmup, epi):
@@ -709,7 +898,7 @@ def _tune_bwd(x, k, bvec, padding, include_pallas, repeats, warmup, epi):
 
 def _tune_step(
     x, k, bvec, padding, lax_methods, pallas_methods, include_pallas,
-    repeats, warmup, fwd_tiles, epi,
+    repeats, warmup, fwd_tiles, gemm_tiles, epi,
 ):
     """Race the full fwd+bwd value_and_grad per forward method.
 
@@ -751,6 +940,14 @@ def _tune_step(
                     a[0], a[1], padding, _th, _tw, "auto"
                 )
                 return epi.apply(y, a[2] if len(a) > 2 else None).sum()
+        elif name == "pallas_gemm":
+            tmv, tnv, tkv = gemm_tiles
+
+            def loss(*a, _tm=tmv, _tn=tnv, _tk=tkv):
+                return ops.transpose_conv2d_pallas_gemm(
+                    a[0], a[1], padding, _tm, _tn, _tk, "auto", epi,
+                    a[2] if len(a) > 2 else None,
+                ).sum()
         else:
             def loss(*a, _m=name):
                 return _layer_fn(padding, _m, epi)(*a).sum()
@@ -773,6 +970,8 @@ def _tune_step(
         entry["tile_h"], entry["tile_w"] = fwd_tiles
         if epi is not None:
             entry["fuse_epilogue"] = fuse_epi
+    elif winner_method == "pallas_gemm":
+        entry["tile_m"], entry["tile_n"], entry["tile_k"] = gemm_tiles
     return entry
 
 
@@ -833,7 +1032,7 @@ def tune_layer(
         b, n_in, n_k, cin, cout, padding, str(jnp.dtype(dtype)), backend,
         epilogue=epilogue,
     )
-    fwd_entry, fwd_tiles = _tune_fwd(
+    fwd_entry, fwd_tiles, gemm_tiles = _tune_fwd(
         x, k, bvec, padding, lax_methods, pallas_methods, include_pallas,
         repeats, warmup, epilogue,
     )
@@ -850,7 +1049,7 @@ def tune_layer(
     record(key, bwd_entry, direction="bwd", persist=False)
     step_entry = _tune_step(
         x, k, bvec, padding, lax_methods, pallas_methods, include_pallas,
-        repeats, warmup, fwd_tiles, epilogue,
+        repeats, warmup, fwd_tiles, gemm_tiles, epilogue,
     )
     record(key, step_entry, direction="step", persist=persist)
     return lookup(key)
@@ -859,6 +1058,7 @@ def tune_layer(
 def tune_gan_zoo(
     *, batch: int = 1, repeats: int = 3, persist: bool = True,
     train: bool = False, epilogues: bool = True,
+    methods: tuple | None = None, include_pallas: bool | None = None,
 ) -> dict[str, dict]:
     """Tune every distinct Table-4 GAN layer shape; returns {key: record}.
 
@@ -883,7 +1083,8 @@ def tune_gan_zoo(
                 continue
             seen.add((sig, epi))
             entry = tune_layer(*sig, repeats=repeats, persist=persist,
-                               train=train, epilogue=epi)
+                               train=train, epilogue=epi, methods=methods,
+                               include_pallas=include_pallas)
             out[layer_key(*sig, epilogue=epi)] = entry
     return out
 
@@ -894,6 +1095,8 @@ def main(argv=None):
     PYTHONPATH=src python -m repro.kernels.autotune --gan-zoo
     PYTHONPATH=src python -m repro.kernels.autotune --gan-zoo --train
     PYTHONPATH=src python -m repro.kernels.autotune --layer 1 8 4 512 256 2
+    PYTHONPATH=src python -m repro.kernels.autotune --layer 8 4 4 1024 512 2 \\
+        --methods pallas_gemm,pallas_fused --include-pallas
     PYTHONPATH=src python -m repro.kernels.autotune --prune
     """
     import argparse
@@ -913,8 +1116,29 @@ def main(argv=None):
     ap.add_argument("--no-epilogue", action="store_true",
                     help="tune bare transpose-conv signatures (no fused "
                          "bias+activation epilogues)")
+    ap.add_argument("--methods",
+                    help="comma-separated forward-candidate filter (race "
+                         "or debug a single candidate in isolation), e.g. "
+                         "--methods pallas_gemm,pallas_fused")
+    ap.add_argument("--include-pallas", action="store_true",
+                    help="force wall-clock racing of the Pallas kernels "
+                         "even off-TPU (interpret mode is Python-speed: "
+                         "debugging only, not predictive of TPU)")
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args(argv)
+
+    methods = None
+    if args.methods:
+        methods = tuple(
+            s.strip() for s in args.methods.split(",") if s.strip()
+        )
+        unknown = sorted(set(methods) - set(DEFAULT_CANDIDATES))
+        if unknown:
+            ap.error(
+                f"unknown method(s): {', '.join(unknown)}; "
+                f"valid: {', '.join(DEFAULT_CANDIDATES)}"
+            )
+    include_pallas = True if args.include_pallas else None
 
     if args.prune:
         dropped = prune_cache()
@@ -928,10 +1152,13 @@ def main(argv=None):
 
     if args.gan_zoo:
         entries = tune_gan_zoo(repeats=args.repeats, train=args.train,
-                               epilogues=not args.no_epilogue)
+                               epilogues=not args.no_epilogue,
+                               methods=methods,
+                               include_pallas=include_pallas)
     else:
         entry = tune_layer(*args.layer, repeats=args.repeats,
-                           train=args.train)
+                           train=args.train, methods=methods,
+                           include_pallas=include_pallas)
         entries = {layer_key(*args.layer): entry}
     print(f"# cache: {cache_path()}")
     for key, rec in entries.items():
@@ -942,6 +1169,8 @@ def main(argv=None):
                 continue
             extra = (f"[{e['tile_h']}x{e['tile_w']}]"
                      if "tile_h" in e else "")
+            if "tile_m" in e:
+                extra = f"[{e['tile_m']}x{e['tile_n']}x{e['tile_k']}]"
             parts.append(f"{d}={e['method']}{extra} {e['time_s']:.6f}s")
         print(f"{key} -> " + "  ".join(parts))
 

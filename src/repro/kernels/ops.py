@@ -1,10 +1,12 @@
 """Jit'd, differentiable wrappers around the Pallas transpose-conv kernels.
 
 Forward: the phase-fused spatially-tiled kernel is the default; the legacy
-per-phase grid stays available as the autotuner baseline. Both take an
-optional fused :class:`~repro.kernels.epilogue.Epilogue` (``+ bias`` then
-activation, applied on the fp32 accumulator before the single store) plus
-the differentiable ``bias`` vector. Backward: the custom VJP dispatches per
+per-phase grid stays available as the autotuner baseline, and the
+implicit-GEMM kernel (:mod:`repro.kernels.transpose_conv2d_gemm`) covers
+the channel-deep small-spatial regime. All three take an optional fused
+:class:`~repro.kernels.epilogue.Epilogue` (``+ bias`` then activation,
+applied on the fp32 accumulator before the single store) plus the
+differentiable ``bias`` vector. Backward: the custom VJP dispatches per
 layer shape between
 
 * the **segregated Pallas backward** (:mod:`repro.kernels.transpose_conv2d_bwd`
@@ -49,6 +51,9 @@ from repro.kernels.transpose_conv2d import (
     transpose_conv2d_pallas_phase as _pallas_phase_fwd,
 )
 from repro.kernels.transpose_conv2d_bwd import transpose_conv2d_bwd_pallas
+from repro.kernels.transpose_conv2d_gemm import (
+    transpose_conv2d_pallas_gemm as _pallas_gemm_fwd,
+)
 
 BWD_METHODS = ("auto", "pallas", "lax")
 
@@ -238,3 +243,41 @@ def _phase_bwd(padding, bwd, epilogue, res, g):
 
 
 transpose_conv2d_pallas_phase.defvjp(_phase_fwd, _phase_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
+def transpose_conv2d_pallas_gemm(
+    x, kernel, padding: int = 0, tile_m: int | None = None,
+    tile_n: int | None = None, tile_k: int | None = None,
+    bwd: str = "auto", epilogue=None, bias=None,
+):
+    """Implicit-GEMM Pallas forward, same dispatched backward.
+
+    tile_m/tile_n/tile_k pin the GEMM tiling (e.g. the autotuner's
+    measured winner); None uses the kernel's defaults. A gemm-formulated
+    backward is intentionally out of scope: the VJP dispatches to the
+    existing tuned backward selector (segregated Pallas dx/dw kernels or
+    the lax VJP), so gradients are bit-for-bit the same machinery every
+    other forward uses — the forward race is decoupled from the backward
+    race.
+    """
+    return _pallas_gemm_fwd(
+        x, kernel, padding, tile_m=tile_m, tile_n=tile_n, tile_k=tile_k,
+        epilogue=epilogue, bias=bias,
+    )
+
+
+def _gemm_fwd(x, kernel, padding, tile_m, tile_n, tile_k, bwd, epilogue,
+              bias):
+    y = _pallas_gemm_fwd(
+        x, kernel, padding, tile_m=tile_m, tile_n=tile_n, tile_k=tile_k,
+        epilogue=epilogue, bias=bias,
+    )
+    return y, _epi_residuals(x, kernel, y, epilogue, bias)
+
+
+def _gemm_bwd(padding, tile_m, tile_n, tile_k, bwd, epilogue, res, g):
+    return _dispatch_bwd(padding, bwd, res, g, epi=epilogue)
+
+
+transpose_conv2d_pallas_gemm.defvjp(_gemm_fwd, _gemm_bwd)

@@ -38,8 +38,10 @@ Resolution rules (identical to the dispatch they replace):
 * ``method="auto"`` — the tuned ``step`` entry in training mode, else the
   tuned ``fwd`` entry; cold cache falls back to the §Perf napkin rule
   (segregated form iff the per-phase GEMM has ``ceil(M/2) >= 8`` rows).
-* explicit ``pallas``/``pallas_fused``/``pallas_phase`` — the method is
-  pinned; tuned fused tiles are still picked up when the cache has them.
+* explicit ``pallas``/``pallas_fused``/``pallas_phase``/``pallas_gemm`` —
+  the method is pinned; tuned tiles (spatial for the fused kernel, GEMM
+  m/cout/cin for the implicit-GEMM kernel) are still picked up when the
+  cache has them.
 * backward — the tuned ``bwd`` entry (method + dx tiles); cold cache
   defaults to the segregated Pallas backward on a real accelerator backend
   and the lax VJP elsewhere.
@@ -62,8 +64,10 @@ from repro.kernels.epilogue import Epilogue
 
 # forward methods that resolve through plans (everything the autotuner can
 # pick, plus the explicit Pallas spellings)
-PLANNED_METHODS = ("auto", "pallas", "pallas_fused", "pallas_phase")
-_PALLAS_FWD = ("pallas", "pallas_fused", "pallas_phase")
+PLANNED_METHODS = (
+    "auto", "pallas", "pallas_fused", "pallas_phase", "pallas_gemm",
+)
+_PALLAS_FWD = ("pallas", "pallas_fused", "pallas_phase", "pallas_gemm")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +89,9 @@ class LayerPlan:
     method: str = "unified_reshape"
     tile_h: int | None = None     # fused Pallas forward spatial tiles
     tile_w: int | None = None
+    tile_m: int | None = None     # implicit-GEMM forward tiles (rows,
+    tile_n: int | None = None     # cout lanes, cin reduction) — set only
+    tile_k: int | None = None     # when method resolves to pallas_gemm
     # whether the Pallas kernels run the epilogue in-kernel (fused on the
     # fp32 accumulator) or the layer composes it as post-ops — the autotuner
     # races both; lax methods always compose (XLA fuses elementwise tails)
@@ -101,6 +108,8 @@ class LayerPlan:
     def describe(self) -> str:
         tiles = (f"[{self.tile_h}x{self.tile_w}]"
                  if self.tile_h is not None else "")
+        if self.tile_m is not None:
+            tiles = f"[{self.tile_m}x{self.tile_n}x{self.tile_k}]"
         btiles = (f"[{self.bwd_tile_h}x{self.bwd_tile_w}]"
                   if self.bwd_tile_h is not None else "")
         epi = ""
@@ -190,6 +199,7 @@ def plan_layer(
     fwd = rec.get("fwd") or {}
     source = "cold"
     tile_h = tile_w = None
+    tile_m = tile_n = tile_k = None
     fuse_epi = True  # cold default: the fused epilogue is the point
     if method == "auto":
         entry = (rec.get("step") if train else None) or fwd or None
@@ -199,6 +209,9 @@ def plan_layer(
             # entry's tiles when only the fwd direction was tuned
             tile_h = entry.get("tile_h", fwd.get("tile_h"))
             tile_w = entry.get("tile_w", fwd.get("tile_w"))
+            tile_m = entry.get("tile_m", fwd.get("tile_m"))
+            tile_n = entry.get("tile_n", fwd.get("tile_n"))
+            tile_k = entry.get("tile_k", fwd.get("tile_k"))
             fuse_epi = entry.get(
                 "fuse_epilogue", fwd.get("fuse_epilogue", True)
             )
@@ -213,8 +226,15 @@ def plan_layer(
             tile_h, tile_w = fwd.get("tile_h"), fwd.get("tile_w")
             fuse_epi = fwd.get("fuse_epilogue", True)
             source = "tuned"  # pinned method, but tiles came from the cache
+        elif resolved == "pallas_gemm" and fwd.get("method") == "pallas_gemm":
+            tile_m, tile_n = fwd.get("tile_m"), fwd.get("tile_n")
+            tile_k = fwd.get("tile_k")
+            fuse_epi = fwd.get("fuse_epilogue", True)
+            source = "tuned"
     if resolved not in ("pallas_fused", "pallas"):
         tile_h = tile_w = None
+    if resolved != "pallas_gemm":
+        tile_m = tile_n = tile_k = None
     if resolved not in _PALLAS_FWD or epilogue is None:
         fuse_epi = True  # only meaningful for epilogue'd Pallas layers
 
@@ -229,7 +249,9 @@ def plan_layer(
     return LayerPlan(
         batch=b, n_in=n_in, n_k=n_k, cin=cin, cout=cout, padding=padding,
         dtype=dtype, epilogue=epilogue, method=resolved,
-        tile_h=tile_h, tile_w=tile_w, fuse_epilogue=fuse_epi,
+        tile_h=tile_h, tile_w=tile_w,
+        tile_m=tile_m, tile_n=tile_n, tile_k=tile_k,
+        fuse_epilogue=fuse_epi,
         bwd_method=bwd_method, bwd_tile_h=bwd_tile_h, bwd_tile_w=bwd_tile_w,
         source=source,
     )
@@ -373,6 +395,11 @@ def execute_layer(lp: LayerPlan, x, kernel, *, bias=None, precision=None):
         if lp.method == "pallas_phase":
             y = ops.transpose_conv2d_pallas_phase(
                 x, kernel, lp.padding, lp, kernel_epi, kernel_bias
+            )
+        elif lp.method == "pallas_gemm":
+            y = ops.transpose_conv2d_pallas_gemm(
+                x, kernel, lp.padding, lp.tile_m, lp.tile_n, lp.tile_k,
+                lp, kernel_epi, kernel_bias,
             )
         else:
             y = ops.transpose_conv2d_pallas(

@@ -130,8 +130,11 @@ def test_tune_layer_records_measured_winner():
     entry = rec["fwd"]
     assert entry["method"] in entry["candidates"]
     assert entry["time_s"] == min(entry["candidates"].values()) > 0
-    # on CPU the Pallas kernels compete via the roofline proxy only
-    assert set(entry["proxy"]) == {"pallas_fused", "pallas_phase"}
+    # on CPU the Pallas kernels compete via the roofline proxy only — the
+    # whole zoo, including the implicit-GEMM forward
+    assert set(entry["proxy"]) == {
+        "pallas_fused", "pallas_phase", "pallas_gemm"
+    }
     # forward-only tuning leaves the training directions cold
     assert "bwd" not in rec and "step" not in rec
     # and the cache now answers for this exact shape
@@ -343,6 +346,132 @@ def test_roofline_fused_beats_phase_on_gan_layers():
                 "pallas_phase", 1, hw, cfg.kernel, cin, cout, cfg.padding
             )
             assert fused <= phase, (cfg.name, hw, cin, cout, fused, phase)
+
+
+def test_gemm_winner_recorded_and_dispatched(monkeypatch):
+    """When the implicit-GEMM kernel wins the forward race, the entry must
+    record its (tile_m, tile_n, tile_k) and method='auto' must execute the
+    GEMM kernel at those tiles — the full tune -> cache -> dispatch loop."""
+    from repro.kernels import ops
+
+    # deterministic race: _time_fn answers from a call-order queue. Order in
+    # _tune_fwd: the lax methods first, then the gemm tile variants — for
+    # this shape every variant snaps to the same feasible tiling, so the
+    # queue is [unified_reshape, gemm].
+    times = iter([1.0, 1e-4])
+    monkeypatch.setattr(
+        autotune, "_time_fn", lambda fn, *a, **kw: next(times)
+    )
+    rec = autotune.tune_layer(
+        1, 4, 4, 32, 16, 2, include_pallas=True,
+        methods=("unified_reshape", "pallas_gemm"),
+    )
+    entry = rec["fwd"]
+    assert entry["method"] == "pallas_gemm"
+    assert entry["candidates"]["pallas_gemm"] == 1e-4
+    tiles = (entry["tile_m"], entry["tile_n"], entry["tile_k"])
+    assert tiles == (64, 16, 32)  # rows=1*8*8 cap, cout, cin
+
+    seen = []
+    orig = ops.transpose_conv2d_pallas_gemm
+
+    def spy(x, k, padding=0, tile_m=None, tile_n=None, tile_k=None,
+            bwd="auto", epilogue=None, bias=None):
+        seen.append((tile_m, tile_n, tile_k))
+        return orig(x, k, padding, tile_m, tile_n, tile_k, bwd,
+                    epilogue, bias)
+
+    monkeypatch.setattr(ops, "transpose_conv2d_pallas_gemm", spy)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 4, 4, 32)),
+                    dtype=jnp.float32)
+    k = jnp.asarray(np.random.default_rng(1).normal(size=(4, 4, 32, 16)),
+                    dtype=jnp.float32)
+    want = ref.conventional_ref(x, k, 2)
+    got = tc.transpose_conv2d(x, k, 2, method="auto")
+    assert seen == [tiles], "auto must dispatch the tuned gemm tiles"
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_unknown_winner_method_set_aside_not_clobbered():
+    """Forward compat: a v3 cache written by a newer build may record winner
+    methods this build can't dispatch. Those records must be excluded from
+    lookup (cold-cache behavior, no crash) yet survive a re-save verbatim —
+    never silently dropped or treated as dispatchable."""
+    alien_key = autotune.layer_key(1, 4, 4, 8, 8, 2)
+    good_key = autotune.layer_key(1, 8, 4, 16, 8, 2)
+    alien_rec = {"fwd": {"method": "pallas_hyperwarp", "time_s": 1e-9,
+                         "source": "measured", "warp_factor": 9}}
+    autotune.cache_path().parent.mkdir(parents=True, exist_ok=True)
+    autotune.cache_path().write_text(json.dumps({
+        "version": 3,
+        "entries": {
+            alien_key: alien_rec,
+            good_key: {"fwd": {"method": "unified_reshape", "time_s": 1e-4,
+                               "source": "measured"}},
+        },
+    }))
+    # the alien record answers as a cache miss, the native one as a hit
+    assert autotune.lookup(alien_key) is None
+    assert autotune.best_method(1, 4, 4, 8, 8, 2) is None
+    assert autotune.best_method(1, 8, 4, 16, 8, 2)["method"] == \
+        "unified_reshape"
+    # dispatch on the alien shape degrades to the cold-cache napkin rule
+    x = jnp.ones((1, 4, 4, 8), jnp.float32)
+    k = jnp.ones((4, 4, 8, 8), jnp.float32)
+    np.testing.assert_allclose(
+        tc.transpose_conv_auto(x, k, 2), ref.conventional_ref(x, k, 2),
+        rtol=1e-4, atol=1e-4,
+    )
+    # a re-save merges the set-aside record back untouched
+    autotune.record(good_key, {"method": "conventional", "time_s": 2e-4,
+                               "source": "measured"})
+    blob = json.loads(autotune.cache_path().read_text())
+    assert blob["entries"][alien_key] == alien_rec
+    assert blob["entries"][good_key]["fwd"]["method"] == "conventional"
+
+
+def test_retuned_key_overrides_alien_record():
+    """Re-tuning a shape whose record went alien replaces it on save: the
+    native result wins the merge (last-writer semantics, same as two
+    concurrent tuners)."""
+    key = autotune.layer_key(1, 8, 4, 16, 8, 2)
+    autotune.cache_path().parent.mkdir(parents=True, exist_ok=True)
+    autotune.cache_path().write_text(json.dumps({
+        "version": 3,
+        "entries": {key: {"fwd": {"method": "pallas_hyperwarp",
+                                  "time_s": 1e-9, "source": "measured"}}},
+    }))
+    assert autotune.lookup(key) is None
+    autotune.record(key, {"method": "unified_reshape", "time_s": 1e-4,
+                          "source": "measured"})
+    assert autotune.best_method(1, 8, 4, 16, 8, 2)["method"] == \
+        "unified_reshape"
+    blob = json.loads(autotune.cache_path().read_text())
+    assert blob["entries"][key]["fwd"]["method"] == "unified_reshape"
+
+
+def test_cli_methods_filter_rejects_unknown_names(capsys):
+    """--methods with a typo'd candidate must fail fast, naming the valid
+    set, instead of silently racing an empty/partial field."""
+    with pytest.raises(SystemExit) as exc:
+        autotune.main(["--layer", "1", "4", "4", "2", "2", "2",
+                       "--methods", "unified_reshape,pallas_warp"])
+    assert exc.value.code == 2
+    err = capsys.readouterr().err
+    assert "pallas_warp" in err
+    for valid in autotune.DEFAULT_CANDIDATES:
+        assert valid in err
+
+
+def test_cli_methods_filter_accepts_known_names(capsys):
+    autotune.main(["--layer", "1", "4", "4", "2", "2", "2",
+                   "--methods", "unified_reshape,conventional",
+                   "--repeats", "1"])
+    out = capsys.readouterr().out
+    assert "fwd=" in out
+    entry = autotune.best_method(1, 4, 4, 2, 2, 2)
+    assert entry["method"] in ("unified_reshape", "conventional")
+    assert set(entry["candidates"]) == {"unified_reshape", "conventional"}
 
 
 def test_bwd_roofline_pallas_beats_lax_on_gan_layers():

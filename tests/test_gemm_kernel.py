@@ -1,0 +1,210 @@
+"""Implicit-GEMM Pallas kernel: structure + numerics.
+
+Everything runs in interpret mode on CPU (the kernel body executes in
+Python), validating the exact masked-gather/grid logic that runs on real
+TPUs: odd kernels, odd paddings, row counts that don't divide ``tile_m``,
+bf16 vs fp32 tolerances, the custom VJP (which falls back to the tuned
+backward — the GEMM formulation is forward-only), agreement with the
+phase-fused kernel, and the BlockSpec index maps the amortization argument
+rests on (input plane refetched once per cin tile, not once per tap).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import transpose_conv2d_gemm as tcg
+from repro.kernels.transpose_conv2d import transpose_conv2d_pallas
+from repro.kernels.transpose_conv2d_gemm import (
+    default_gemm_tiles,
+    transpose_conv2d_pallas_gemm,
+)
+
+RNG = np.random.default_rng(17)
+
+
+def _rand(shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+@pytest.mark.parametrize("n_k", [3, 5])
+@pytest.mark.parametrize("pad", [1, 3])
+@pytest.mark.parametrize("n_in", [5, 12])
+def test_odd_kernels_odd_paddings(n_k, pad, n_in):
+    """Odd kernels and odd paddings exercise the parity predicate on both
+    even and odd tap offsets — every (oh+kh-P) % 2 branch of the gather."""
+    if 2 * n_in - n_k + 2 * pad <= 0:
+        pytest.skip("empty output")
+    x = _rand((2, n_in, n_in, 3))
+    k = _rand((n_k, n_k, 3, 4))
+    want = ref.conventional_ref(x, k, pad)
+    got = transpose_conv2d_pallas_gemm(x, k, pad)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("tile_m", [8, 40, 104])
+def test_tile_m_that_does_not_divide_rows(tile_m):
+    """rows = 1*20*20 = 400: the last m tile over-computes padded rows whose
+    batch index lands out of range — they must predicate to zero and crop."""
+    x = _rand((1, 9, 9, 4))
+    k = _rand((4, 4, 4, 2))
+    want = ref.conventional_ref(x, k, 1)  # m = 2*9 - 4 + 2 = 16
+    got = transpose_conv2d_pallas_gemm(x, k, 1, tile_m=tile_m)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_channel_tiles_must_divide():
+    x = _rand((1, 6, 6, 6))
+    k = _rand((4, 4, 6, 6))
+    with pytest.raises(ValueError, match="!= 0"):
+        transpose_conv2d_pallas_gemm(x, k, 2, tile_n=4)
+    with pytest.raises(ValueError, match="!= 0"):
+        transpose_conv2d_pallas_gemm(x, k, 2, tile_k=4)
+
+
+def test_channel_tile_split_matches_reference():
+    """tile_k < Cin splits the reduction across k steps; tile_n < Cout splits
+    the output channels across grid columns — both must stay exact."""
+    x = _rand((2, 6, 6, 6))
+    k = _rand((3, 3, 6, 9))
+    want = ref.conventional_ref(x, k, 1)
+    got = transpose_conv2d_pallas_gemm(x, k, 1, tile_m=16, tile_n=3, tile_k=2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [
+    (jnp.float32, 1e-4),
+    (jnp.bfloat16, 0.07),
+])
+def test_dtype_tolerance_sweep(dtype, tol):
+    """bf16 inputs accumulate in fp32 (preferred_element_type on both the
+    one-hot gather and the weight matmul): error bounded by input rounding."""
+    x = _rand((1, 10, 10, 8)).astype(dtype)
+    k = _rand((4, 4, 8, 8)).astype(dtype)
+    want = ref.conventional_ref(
+        x.astype(jnp.float32), k.astype(jnp.float32), 2
+    )
+    got = transpose_conv2d_pallas_gemm(x, k, 2)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_gemm_and_fused_kernels_agree():
+    """The zoo's two forward formulations of the same operator."""
+    x = _rand((2, 8, 8, 4))
+    k = _rand((4, 4, 4, 4))
+    a = transpose_conv2d_pallas_gemm(x, k, 2, tile_m=32, tile_n=2, tile_k=2)
+    b = transpose_conv2d_pallas(x, k, 2, tile_h=4, tile_w=4)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_default_gemm_tiles_feasible():
+    """Defaults must satisfy the kernel's own divisibility contract across
+    awkward channel counts."""
+    for b, n_in, n_k, pad, cin, cout in [
+        (1, 4, 4, 2, 1024, 512), (8, 4, 4, 2, 512, 256),
+        (1, 6, 3, 1, 6, 9), (2, 5, 5, 3, 7, 3),
+    ]:
+        tm, tn, tk = default_gemm_tiles(b, n_in, n_k, pad, cin, cout)
+        assert tm > 0 and cout % tn == 0 and cin % tk == 0
+
+
+@pytest.mark.parametrize("pad", [1, 2])
+def test_vjp_gradcheck_vs_unified(pad):
+    """ops.transpose_conv2d_pallas_gemm (GEMM fwd, custom VJP dispatching
+    the tuned backward) must match differentiating transpose_conv_unified."""
+    from repro.core.transpose_conv import transpose_conv_unified
+
+    x = _rand((1, 7, 7, 2))
+    k = _rand((3, 3, 2, 3))
+
+    def f_gemm(x, k):
+        return jnp.sum(jnp.sin(ops.transpose_conv2d_pallas_gemm(
+            x, k, pad, None, None, None, "lax"
+        )))
+
+    def f_ref(x, k):
+        return jnp.sum(jnp.sin(transpose_conv_unified(x, k, pad)))
+
+    gp = jax.grad(f_gemm, argnums=(0, 1))(x, k)
+    gr = jax.grad(f_ref, argnums=(0, 1))(x, k)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("act,use_bias", [
+    ("relu", True), ("tanh", False), ("leaky_relu", True), ("none", True),
+])
+def test_epilogue_fused_vs_postops(act, use_bias):
+    """The in-kernel epilogue at the last k step must equal the unfused
+    kernel-plus-post-ops spelling, forward and gradients."""
+    from repro.kernels.epilogue import Epilogue
+    from repro.kernels import epilogue as epilib
+
+    epi = epilib.canonical(Epilogue(bias=use_bias, act=act))
+    x = _rand((1, 6, 6, 4))
+    k = _rand((4, 4, 4, 4))
+    bias = _rand((4,)) if use_bias else None
+    bias_arg = bias if (epi is not None and epi.bias) else None
+
+    def fused(x, k, b):
+        return ops.transpose_conv2d_pallas_gemm(
+            x, k, 2, None, None, None, "lax", epi, b
+        ).sum()
+
+    def postops(x, k, b):
+        y = ops.transpose_conv2d_pallas_gemm(x, k, 2, None, None, None, "lax")
+        if epi is not None:
+            y = epi.apply(y, b)
+        return y.sum()
+
+    np.testing.assert_allclose(
+        fused(x, k, bias_arg), postops(x, k, bias), rtol=3e-5, atol=3e-5
+    )
+    argnums = (0, 1, 2) if bias_arg is not None else (0, 1)
+    gf = jax.grad(fused, argnums=argnums)(x, k, bias_arg)
+    gp = jax.grad(postops, argnums=argnums)(x, k, bias)
+    for a, w in zip(gf, gp):
+        np.testing.assert_allclose(a, w, rtol=3e-5, atol=3e-5)
+
+
+def test_blockspec_plane_fetch_amortized_over_taps():
+    """The acceptance criterion for the k-axis ordering: the grid is
+    (m_tiles, cout_tiles, cin_tiles * taps); the input BlockSpec carries the
+    FULL (B, N, N) plane tiled only in cin, and its index map depends on the
+    k step solely through ``kk // n_tap`` — the n_tap consecutive steps
+    sharing a cin tile reuse one fetched plane. The weight map walks taps on
+    the fast axis: ``(kk % n_tap, kk // n_tap, co)``."""
+    captured = {}
+    orig = tcg.pl.pallas_call
+
+    def spy(kernel, **kw):
+        captured["grid"] = kw["grid"]
+        captured["in_specs"] = kw["in_specs"]
+        return orig(kernel, **kw)
+
+    tcg.pl.pallas_call = spy
+    try:
+        # unique shape so jit actually retraces and the spy runs
+        x = _rand((3, 11, 11, 6))
+        k = _rand((3, 3, 6, 4))
+        want = ref.conventional_ref(x, k, 1)
+        got = transpose_conv2d_pallas_gemm(x, k, 1, tile_m=64, tile_k=3)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    finally:
+        tcg.pl.pallas_call = orig
+
+    n_tap = 9  # 3x3 taps; cin=6, tile_k=3 -> 2 cin tiles; m=21, rows=1323
+    assert captured["grid"] == (21, 1, 2 * n_tap)  # ceil(1323/64), 4/4, 18
+    x_spec, w_spec = captured["in_specs"][:2]
+    assert tuple(x_spec.block_shape) == (3, 11, 11, 3)  # full plane, cin tile
+    assert tuple(w_spec.block_shape) == (1, 3, 4)
+    x_map, w_map = x_spec.index_map, w_spec.index_map
+    # plane index constant across the n_tap steps of one cin tile
+    assert [x_map(5, 0, kk) for kk in (0, n_tap - 1, n_tap)] == \
+        [(0, 0, 0, 0), (0, 0, 0, 0), (0, 0, 0, 1)]
+    # weight map: taps fast, cin tile slow, cout from the grid column
+    assert w_map(0, 0, 0) == (0, 0, 0)
+    assert w_map(0, 2, n_tap - 1) == (n_tap - 1, 0, 2)
+    assert w_map(1, 1, n_tap + 4) == (4, 1, 1)

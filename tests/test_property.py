@@ -157,3 +157,64 @@ def test_fused_epilogue_equals_postops(
             np.asarray(a, np.float32), np.asarray(w, np.float32),
             rtol=tol, atol=tol,
         )
+
+
+@given(
+    n_in=st.integers(3, 7),
+    n_k=st.integers(2, 5),
+    pad=st.integers(0, 3),
+    cin=st.integers(1, 3),
+    cout=st.integers(1, 3),
+    tile_m=st.sampled_from((None, 8, 24)),
+    act=st.sampled_from(("none", "relu", "tanh", "leaky_relu")),
+    use_bias=st.booleans(),
+    bf16=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_gemm_equals_reference(
+    n_in, n_k, pad, cin, cout, tile_m, act, use_bias, bf16, seed
+):
+    """Swarm over odd kernels/paddings/shapes, non-dividing ``tile_m``,
+    fp32 + bf16, every epilogue: the implicit-GEMM forward (and its custom
+    VJP, which differentiates through the tuned backward) must be
+    numerically interchangeable with the unified reference layer.
+    """
+    from repro.kernels import epilogue as epilib
+    from repro.kernels import ops
+    from repro.kernels.epilogue import Epilogue
+
+    if 2 * n_in - n_k + 2 * pad <= 0:
+        return
+    epi = epilib.canonical(Epilogue(bias=use_bias, act=act))
+    dt = jnp.bfloat16 if bf16 else jnp.float32
+    tol = 3e-2 if bf16 else 3e-5
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, n_in, n_in, cin)), dt)
+    k = jnp.asarray(rng.normal(size=(n_k, n_k, cin, cout)) * 0.3, dt)
+    b = jnp.asarray(rng.normal(size=(cout,)), dt) if use_bias else None
+    bias_arg = b if (epi is not None and epi.bias) else None
+
+    def gemm(x, k, b):
+        return ops.transpose_conv2d_pallas_gemm(
+            x, k, pad, tile_m, None, None, "lax", epi, b
+        ).sum()
+
+    def reference(x, k, b):
+        y = tc.transpose_conv_unified(x, k, pad)
+        if epi is not None:
+            y = epi.apply(y, b)
+        return y.sum()
+
+    np.testing.assert_allclose(
+        np.asarray(gemm(x, k, bias_arg), np.float32),
+        np.asarray(reference(x, k, b), np.float32), rtol=tol, atol=tol,
+    )
+    argnums = (0, 1, 2) if bias_arg is not None else (0, 1)
+    gg = jax.grad(gemm, argnums=argnums)(x, k, bias_arg)
+    gr = jax.grad(reference, argnums=argnums)(x, k, b)
+    for a, w in zip(gg, gr):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(w, np.float32),
+            rtol=tol, atol=tol,
+        )
