@@ -9,9 +9,11 @@
 # (fused >= per-phase, pallas bwd >= lax bwd), then the serving benchmark
 # (serving_bench --quick --check), failing unless the bucketed engine beats
 # sequential per-request dispatch by the floor factor with zero steady-state
-# recompiles. Full mode additionally runs table4_gans, which merges its
-# train rows into the same artifact (the bench preserves the table4_train
-# section when it rewrites the file).
+# recompiles, then the training benchmark (training_bench --quick --check),
+# a crash-resume smoke that fails unless a mid-run kill relaunches from the
+# newest checkpoint onto a bit-exact loss trajectory. Full mode additionally
+# runs table4_gans, which merges its train rows into the same artifact (the
+# bench preserves the table4_train section when it rewrites the file).
 from __future__ import annotations
 
 import argparse
@@ -26,7 +28,7 @@ def main(argv=None) -> None:
     )
     args = ap.parse_args(argv)
 
-    from benchmarks import serving_bench, transpose_conv_bench
+    from benchmarks import serving_bench, training_bench, transpose_conv_bench
 
     if args.quick:
         t0 = time.time()
@@ -37,6 +39,10 @@ def main(argv=None) -> None:
         print("\n===== serving_bench (quick) =====")
         serving_bench.main(["--quick", "--check"])
         print(f"[serving_bench] {time.time() - t0:.1f}s")
+        t0 = time.time()
+        print("\n===== training_bench (quick) =====")
+        training_bench.main(["--quick", "--check"])
+        print(f"[training_bench] {time.time() - t0:.1f}s")
         return
 
     from benchmarks import (
@@ -68,6 +74,11 @@ def main(argv=None) -> None:
     print("\n===== serving_bench =====")
     serving_bench.main(["--check"])
     print(f"[serving_bench] {time.time() - t0:.1f}s")
+
+    t0 = time.time()
+    print("\n===== training_bench =====")
+    training_bench.main(["--check"])
+    print(f"[training_bench] {time.time() - t0:.1f}s")
 
 
 if __name__ == "__main__":

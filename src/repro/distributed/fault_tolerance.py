@@ -3,10 +3,18 @@
 This module documents (and provides the host-side helpers for) the failure
 model the framework is built around. The pieces that live elsewhere:
 
-  checkpoint/restart   train/checkpoint.py — step-atomic npz, resume-by-step
+  checkpoint/restart   train/checkpoint.py — step-atomic npz, resume-by-step,
+                       corrupt-file fallback scan
   stateless data       data/pipeline.py — batch = f(seed, step, host)
-  NaN/anomaly guard    train/trainer.py — skip-and-count bad steps
-  gradient compression optim/compression.py — int8 cross-pod all-reduce
+  NaN/anomaly guard    train/trainer.py + train/gan_trainer.py — skip-and-
+                       count bad steps (GAN trainer: params bitwise untouched)
+  gradient compression optim/compression.py — int8 cross-pod all-reduce with
+                       error feedback carried in the checkpointed opt state
+  production loop      train/gan_trainer.py — the plan-aware trainer wiring
+                       all of the above together
+  fault injection      train/fault_injection.py — every failure below made
+                       deterministically injectable; tests/test_fault_injection.py
+                       is the machine-checked version of this module
 
 Failure model and responses
 ---------------------------

@@ -37,6 +37,47 @@ def decompress_int8(q, scale, shape):
     return flat[:n].reshape(shape)
 
 
+def error_feedback_compress(grads, err=None):
+    """One error-feedback compression round over a gradient pytree.
+
+    Implements the update from the module docstring:
+
+        c_t   = g_t + e_{t-1}
+        q_t   = Q(c_t)               (int8 blockwise absmax)
+        g'_t  = D(q_t)               (what the all-reduce carries)
+        e_t   = c_t - g'_t           (requantization error, carried forward)
+
+    Returns ``(dequantized grads, new error-feedback tree)`` — both fp32,
+    shaped like ``grads``. ``err=None`` starts a zero error state (first
+    step / fresh optimizer). The error tree is plain arrays, so trainers
+    carry it inside the checkpointed optimizer state and it survives
+    crash/resume bit-exactly (pinned by the property suite).
+    """
+    def one(g, e):
+        g = g.astype(jnp.float32)
+        c = g if e is None else g + e.astype(jnp.float32)
+        q, s = compress_int8(c)
+        deq = decompress_int8(q, s, c.shape)
+        return deq, c - deq
+
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    errs = (
+        [None] * len(leaves) if err is None
+        else treedef.flatten_up_to(err)
+    )
+    outs = [one(g, e) for g, e in zip(leaves, errs)]
+    deq = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return deq, new_err
+
+
+def zero_error_state(params):
+    """Fresh (all-zero) error-feedback tree matching ``params``' structure."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
 def compress_tree(grads):
     """Compress every leaf; returns (quantized tree, residual tree)."""
     def one(g):

@@ -51,16 +51,26 @@ from repro.serve.metrics import ServeMetrics
 
 @dataclasses.dataclass
 class GenRequest:
-    """One generation request: ``n`` latent rows for one registered model."""
+    """One generation request: ``n`` latent rows for one registered model.
+
+    ``deadline_s`` (optional) is the request's maximum queueing+service
+    budget, in seconds from admission. A request still queued when its
+    deadline passes is **expired**: dropped at the next step, counted in
+    ``metrics.expired``, and left ``done=False`` with ``expired=True`` —
+    the client is told, never silently handed stale output it has already
+    given up waiting for.
+    """
 
     model: str
     z: object                  # (n, z_dim) latents
+    deadline_s: float | None = None
     # filled by the engine:
     rid: int = -1
     t_submit: float = 0.0
     t_done: float = 0.0
     output: object = None      # (n, H, W, C) on completion
     done: bool = False
+    expired: bool = False
 
     @property
     def n(self) -> int:
@@ -185,6 +195,10 @@ class GanEngine:
                 f"request of {n} samples exceeds the largest bucket "
                 f"{self.policy.max_bucket}; split it client-side"
             )
+        if req.deadline_s is not None and req.deadline_s <= 0:
+            raise ValueError(
+                f"deadline_s must be positive, got {req.deadline_s}"
+            )
         if self.queued_samples + n > self.policy.max_queue:
             self.metrics.record_reject()
             raise QueueFull(
@@ -198,6 +212,31 @@ class GanEngine:
         return req.rid
 
     # --------------------------------------------------------------- step
+
+    def _purge_expired(self, now: float) -> int:
+        """Drop queued requests whose deadline has passed (anywhere in the
+        queue — deadlines are per-request, so a fresh short-deadline request
+        can expire behind a patient head). Runs before every dispatch
+        decision, so an expired request is never packed into a batch."""
+        dropped = 0
+        for slot in self.registry.values():
+            if not any(
+                r.deadline_s is not None
+                and now - r.t_submit > r.deadline_s
+                for r in slot.queue
+            ):
+                continue
+            keep = deque()
+            for r in slot.queue:
+                if (r.deadline_s is not None
+                        and now - r.t_submit > r.deadline_s):
+                    r.expired = True
+                    self.metrics.record_expired(now)
+                    dropped += 1
+                else:
+                    keep.append(r)
+            slot.queue = keep
+        return dropped
 
     def _next_model(self) -> str | None:
         """FIFO fairness across models: serve whichever queue's HEAD request
@@ -216,6 +255,7 @@ class GanEngine:
         batch ran."""
         if now is None:
             now = self.clock()
+        self._purge_expired(now)
         name = self._next_model()
         if name is None:
             return False

@@ -36,6 +36,7 @@ class ServeMetrics:
         self.padded: int = 0              # total rows dispatched (incl. pad)
         self.requests: int = 0            # completed requests
         self.rejected: int = 0            # backpressure rejections
+        self.expired: int = 0             # deadline-expired (never served)
         self.recompiles: int = 0          # trace-time executable builds
         self.batch_wall_s: float = 0.0    # time inside execute calls
         self.t_first: float | None = None  # first admission
@@ -54,6 +55,12 @@ class ServeMetrics:
 
     def record_reject(self) -> None:
         self.rejected += 1
+
+    def record_expired(self, now: float) -> None:
+        """A queued request crossed its deadline before dispatch: it is
+        REJECTED (client told), never silently served stale."""
+        self.expired += 1
+        self.t_last = now if self.t_last is None else max(self.t_last, now)
 
     def record_batch(self, n_real: int, n_padded: int, wall_s: float,
                      now: float) -> None:
@@ -100,6 +107,7 @@ class ServeMetrics:
             "samples": self.samples,
             "batches": self.batches,
             "rejected": self.rejected,
+            "expired": self.expired,
             "recompiles": self.recompiles,
             "elapsed_s": el,
             "batch_wall_s": self.batch_wall_s,
@@ -117,7 +125,8 @@ class ServeMetrics:
             f"{s['elapsed_s'] * 1e3:.1f} ms "
             f"({s['samples_per_s']:.0f} samples/s, {s['batches']} batches, "
             f"pad waste {s['pad_waste'] * 100:.1f}%, "
-            f"{s['rejected']} rejected, {s['recompiles']} compiles) | "
+            f"{s['rejected']} rejected, {s['expired']} expired, "
+            f"{s['recompiles']} compiles) | "
             f"latency ms p50 {lat['p50'] * 1e3:.1f} "
             f"p95 {lat['p95'] * 1e3:.1f} p99 {lat['p99'] * 1e3:.1f}"
         )

@@ -1,2 +1,8 @@
 from repro.train.train_step import TrainConfig, make_train_step, make_eval_step
-from repro.train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.train.checkpoint import (
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+    device_put_like,
+)
+from repro.train.gan_trainer import GanTrainer, GanTrainerConfig

@@ -5,7 +5,15 @@ POSIX), so a crash mid-save never corrupts the latest checkpoint. The tree
 structure is encoded in the flattened key names; restore rebuilds the exact
 pytree (including the int8 optimizer-moment sub-dicts) and can re-shard onto
 any mesh — the npz holds host arrays, so elastic restarts onto a different
-pod count just re-`device_put` with the new shardings.
+pod count just re-`device_put` with the new shardings
+(:func:`device_put_like` is that helper — the trainers use it on resume).
+
+Restore is crash-hardened: a corrupt, truncated, or otherwise unreadable
+``step_*.npz`` (the possible residue of a machine dying mid-write on a
+filesystem without atomic replace, or of bit rot) is *skipped*, and
+:func:`restore_checkpoint` falls back to the newest checkpoint that loads
+cleanly instead of raising. Stray ``*.tmp`` files from a crash mid-save are
+ignored by the step scan and swept by :func:`gc_checkpoints`.
 """
 from __future__ import annotations
 
@@ -19,6 +27,12 @@ import numpy as np
 
 _SEP = "|"
 _BF16_TAG = "::bf16"
+
+# Seam for the fault-injection harness (repro.train.fault_injection): the
+# atomic-publish step of save_checkpoint goes through this indirection so a
+# chaos test can kill the process BETWEEN writing the temp file and
+# publishing it — the exact window the atomicity claim is about.
+_REPLACE = os.replace
 
 
 def _flatten(tree, prefix=""):
@@ -79,44 +93,104 @@ def save_checkpoint(ckpt_dir, step, params, opt_state, extra=None):
     host = jax.tree_util.tree_map(np.asarray, jax.device_get(state))
     flat = _flatten(host)
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    # temp file + atomic replace: a crash at ANY point here leaves either
+    # no new file or the complete one — never a torn step_*.npz. A crash
+    # between write and publish leaves *.tmp residue, which the step scan
+    # ignores and gc_checkpoints sweeps (deliberately no try/finally
+    # cleanup: a hard kill wouldn't run it either, and the chaos suite
+    # verifies the residue is harmless).
     fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
-    try:
-        with os.fdopen(fd, "wb") as f:
-            np.savez(f, **flat)
-        os.replace(tmp, path)  # atomic publish
-    finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    _REPLACE(tmp, path)  # atomic publish
     return path
 
 
-def latest_step(ckpt_dir):
+def checkpoint_steps(ckpt_dir) -> list:
+    """All checkpoint steps present on disk, ascending (no validity check).
+
+    ``*.tmp`` residue from a crash mid-save never matches the step pattern,
+    so a half-written temp file can't shadow a real checkpoint.
+    """
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [
-        int(m.group(1))
-        for f in os.listdir(ckpt_dir)
-        if (m := re.fullmatch(r"step_(\d+)\.npz", f))
-    ]
-    return max(steps) if steps else None
-
-
-def restore_checkpoint(ckpt_dir, step=None):
-    step = step if step is not None else latest_step(ckpt_dir)
-    if step is None:
-        return None, None, None, None
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
-    with np.load(path) as z:
-        flat = {k: z[k] for k in z.files}
-    tree = _unflatten(flat)
-    return step, tree["params"], tree["opt_state"], tree.get("extra")
-
-
-def gc_checkpoints(ckpt_dir, keep_last: int = 3):
-    steps = sorted(
+        return []
+    return sorted(
         int(m.group(1))
         for f in os.listdir(ckpt_dir)
         if (m := re.fullmatch(r"step_(\d+)\.npz", f))
     )
-    for s in steps[:-keep_last]:
+
+
+def latest_step(ckpt_dir):
+    steps = checkpoint_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def _load_tree(path):
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflatten(flat)
+    # a checkpoint without both state trees is no checkpoint at all
+    tree["params"], tree["opt_state"]
+    return tree
+
+
+def restore_checkpoint(ckpt_dir, step=None, *, log_fn=None):
+    """Load ``(step, params, opt_state, extra)`` from the newest *valid*
+    checkpoint (or the explicit ``step``).
+
+    A corrupt/truncated/unreadable file — truncated zip, garbage bytes,
+    missing members — is skipped with a note to ``log_fn`` and the scan
+    falls back to the next-newest checkpoint; ``(None, None, None, None)``
+    only when nothing on disk loads. An explicitly requested ``step`` stays
+    strict: asking for a specific checkpoint that doesn't load is an error,
+    not a silent substitution.
+    """
+    if step is not None:
+        tree = _load_tree(os.path.join(ckpt_dir, f"step_{step:08d}.npz"))
+        return step, tree["params"], tree["opt_state"], tree.get("extra")
+    for s in reversed(checkpoint_steps(ckpt_dir)):
+        path = os.path.join(ckpt_dir, f"step_{s:08d}.npz")
+        try:
+            tree = _load_tree(path)
+        except Exception as e:  # corrupt/truncated/unreadable: fall back
+            if log_fn is not None:
+                log_fn(
+                    f"[checkpoint] skipping unreadable {path}: "
+                    f"{type(e).__name__}: {e}"
+                )
+            continue
+        return s, tree["params"], tree["opt_state"], tree.get("extra")
+    return None, None, None, None
+
+
+def device_put_like(restored, live):
+    """Re-place a restored host-array tree onto the live tree's devices.
+
+    The npz holds mesh-agnostic host arrays; resuming must put each leaf
+    back with the *live* leaf's sharding (single device, or the data/model
+    mesh of an elastic restart) — a bare ``np.asarray`` resume silently
+    drops placement and the next step pays a full transfer + default-device
+    placement instead of the sharded layout the docstring above promises.
+    Leaves are cast to the live leaf's dtype (npz roundtrips fp32/int
+    exactly; bf16 rides the ``::bf16`` view tag).
+    """
+    def one(a, b):
+        a = np.asarray(a).astype(b.dtype)
+        sharding = getattr(b, "sharding", None)
+        if sharding is not None:
+            return jax.device_put(a, sharding)
+        return jax.device_put(a)
+
+    return jax.tree_util.tree_map(one, restored, live)
+
+
+def gc_checkpoints(ckpt_dir, keep_last: int = 3):
+    for s in checkpoint_steps(ckpt_dir)[:-keep_last]:
         os.unlink(os.path.join(ckpt_dir, f"step_{s:08d}.npz"))
+    for f in os.listdir(ckpt_dir):  # sweep crash residue from mid-save kills
+        if f.endswith(".tmp"):
+            try:
+                os.unlink(os.path.join(ckpt_dir, f))
+            except OSError:
+                pass

@@ -20,6 +20,7 @@ import jax
 import numpy as np
 
 from repro.train.checkpoint import (
+    device_put_like,
     gc_checkpoints,
     restore_checkpoint,
     save_checkpoint,
@@ -63,15 +64,14 @@ class Trainer:
         self._install_sigterm()
         step = start_step
         if self.ckpt_dir:
-            got_step, p, o, _ = restore_checkpoint(self.ckpt_dir)
+            got_step, p, o, _ = restore_checkpoint(self.ckpt_dir, log_fn=self.log)
             if got_step is not None and got_step > start_step:
                 self.log(f"[trainer] resuming from step {got_step}")
-                params = jax.tree_util.tree_map(
-                    lambda a, b: np.asarray(a).astype(b.dtype), p, params
-                )
-                opt_state = jax.tree_util.tree_map(
-                    lambda a, b: np.asarray(a).astype(b.dtype), o, opt_state
-                )
+                # re-place restored host arrays with the LIVE tree's
+                # shardings: an elastic restart onto a different mesh must
+                # re-shard here, not inherit default placement
+                params = device_put_like(p, params)
+                opt_state = device_put_like(o, opt_state)
                 step = got_step
 
         history = []

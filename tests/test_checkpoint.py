@@ -5,13 +5,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import pytest
+
 from repro.distributed.fault_tolerance import elastic_batch_schedule, shard_owner
 from repro.train.checkpoint import (
+    checkpoint_steps,
+    device_put_like,
     gc_checkpoints,
     latest_step,
     restore_checkpoint,
     save_checkpoint,
 )
+from repro.train.fault_injection import corrupt_checkpoint, write_stray_tmp
 
 
 def _state():
@@ -87,6 +92,71 @@ def test_trainer_resume(tmp_path):
                  ckpt_every=5, log_fn=lambda *_: None)
     _, _, hist = t2.run(p, o, steps=14)
     assert len(hist) == 4  # resumed at 10, ran 10..13
+
+
+@pytest.mark.parametrize("mode", ["truncate", "garbage", "empty"])
+def test_restore_skips_corrupt_and_falls_back(tmp_path, mode):
+    """A damaged newest checkpoint is skipped (with a log line) and the
+    next-newest valid one is served instead of an exception."""
+    params, opt = _state()
+    for s in (1, 2, 3):
+        save_checkpoint(tmp_path, s, params, opt)
+    corrupt_checkpoint(tmp_path, 3, mode=mode)
+    logs = []
+    step, p2, _, _ = restore_checkpoint(tmp_path, log_fn=logs.append)
+    assert step == 2
+    np.testing.assert_array_equal(p2["embed"]["w"], params["embed"]["w"])
+    assert any("skipping unreadable" in m for m in logs)
+
+
+def test_restore_all_corrupt_returns_none(tmp_path):
+    params, opt = _state()
+    for s in (1, 2):
+        save_checkpoint(tmp_path, s, params, opt)
+        corrupt_checkpoint(tmp_path, s, mode="garbage")
+    step, p, o, e = restore_checkpoint(tmp_path, log_fn=lambda *_: None)
+    assert step is None and p is None and o is None and e is None
+
+
+def test_restore_explicit_step_stays_strict(tmp_path):
+    """Asking for a SPECIFIC step that doesn't load must raise, never
+    silently substitute a different checkpoint."""
+    params, opt = _state()
+    save_checkpoint(tmp_path, 1, params, opt)
+    save_checkpoint(tmp_path, 2, params, opt)
+    corrupt_checkpoint(tmp_path, 2, mode="truncate")
+    with pytest.raises(Exception):
+        restore_checkpoint(tmp_path, step=2)
+    step, _, _, _ = restore_checkpoint(tmp_path, step=1)  # valid one still ok
+    assert step == 1
+
+
+def test_stray_tmp_ignored_and_swept(tmp_path):
+    """Mid-save crash residue never shadows a checkpoint and gc sweeps it."""
+    params, opt = _state()
+    save_checkpoint(tmp_path, 5, params, opt)
+    write_stray_tmp(tmp_path)
+    assert checkpoint_steps(tmp_path) == [5]
+    assert latest_step(tmp_path) == 5
+    step, _, _, _ = restore_checkpoint(tmp_path)
+    assert step == 5
+    gc_checkpoints(tmp_path, keep_last=3)
+    assert os.listdir(tmp_path) == ["step_00000005.npz"]
+
+
+def test_device_put_like_casts_and_places():
+    """Restored host arrays come back as committed jax arrays with the live
+    leaf's dtype and sharding (the elastic-restart re-shard path)."""
+    live = {"w": jnp.ones((2, 3), jnp.bfloat16), "c": jnp.array(4, jnp.int32)}
+    restored = {"w": np.arange(6.0).reshape(2, 3), "c": np.int64(9)}
+    out = device_put_like(restored, live)
+    assert isinstance(out["w"], jax.Array)
+    assert out["w"].dtype == jnp.bfloat16 and out["c"].dtype == jnp.int32
+    assert out["w"].sharding == live["w"].sharding
+    np.testing.assert_array_equal(
+        np.asarray(out["w"], np.float32), restored["w"].astype(np.float32)
+    )
+    assert int(out["c"]) == 9
 
 
 def test_elastic_batch_schedule():

@@ -1,0 +1,178 @@
+"""Chaos suite: the failure model of distributed/fault_tolerance.py,
+machine-checked. Each test injects one failure via the fault-injection
+harness and asserts the documented response — with bit-exact trajectory
+identity against an uninterrupted reference run wherever a resume is
+involved. The failure → response matrix lives in docs/TRAINING.md.
+"""
+import glob
+import os
+
+import jax
+import pytest
+
+from repro.data import SyntheticImages
+from repro.models import gan
+from repro.train.checkpoint import checkpoint_steps, latest_step
+from repro.train.fault_injection import (
+    FaultInjector,
+    FaultPlan,
+    SimulatedCrash,
+    corrupt_checkpoint,
+    trajectories_equal,
+    write_stray_tmp,
+)
+from repro.train.gan_trainer import GanTrainer, GanTrainerConfig
+
+TINY = gan.GANConfig("tiny", 8, ((4, 4, 4), (8, 4, 3)))
+
+
+def _data(tcfg):
+    micro, _ = tcfg.micro_accum
+    return SyntheticImages(
+        hw=TINY.out_hw(TINY.layers[-1][0]), channels=TINY.layers[-1][2],
+        global_batch=micro,
+    )
+
+
+def _trainer(tcfg, *, ckpt_dir=None, inj=None):
+    data = _data(tcfg)
+    if inj is not None:
+        data = inj.wrap_data(data, accum=tcfg.micro_accum[1])
+    return GanTrainer(TINY, tcfg, data, ckpt_dir=ckpt_dir, hooks=inj,
+                      log_fn=lambda *a: None)
+
+
+def _reference(tcfg, steps):
+    """The uninterrupted trajectory every chaos run must reproduce."""
+    tr = _trainer(tcfg)
+    _, hist = tr.run(tr.init_state(jax.random.key(0)), steps=steps)
+    return hist
+
+
+def test_kill_and_resume_bit_exact(tmp_path):
+    """Hard crash at step 5 → relaunch resumes from the step-4 checkpoint
+    and the combined trajectory is bit-for-bit the uninterrupted one."""
+    tcfg = GanTrainerConfig(global_batch=2, ckpt_every=2)
+    ref = _reference(tcfg, steps=8)
+
+    inj = FaultInjector(FaultPlan(kill_at_step=5))
+    tr1 = _trainer(tcfg, ckpt_dir=tmp_path, inj=inj)
+    with pytest.raises(SimulatedCrash):
+        tr1.run(tr1.init_state(jax.random.key(0)), steps=8)
+    assert ("kill", 5) in inj.fired
+    assert latest_step(tmp_path) == 4  # saves land AFTER odd steps: 2, 4
+
+    tr2 = _trainer(tcfg, ckpt_dir=tmp_path)
+    _, hist2 = tr2.run(tr2.init_state(jax.random.key(0)), steps=8)
+    assert tr2.resumed_step == 4
+    assert [h["step"] for h in hist2] == [4, 5, 6, 7]
+    assert trajectories_equal(ref, hist2)
+
+
+def test_mid_save_kill_leaves_loadable_checkpoint(tmp_path):
+    """Crash BETWEEN the temp-file write and the atomic publish (the exact
+    window the atomicity claim covers): the dying save must leave only
+    ``*.tmp`` residue, the previous checkpoint must stay the newest valid
+    one, and the relaunch must resume bit-exact — then sweep the residue."""
+    tcfg = GanTrainerConfig(global_batch=2, ckpt_every=2)
+    ref = _reference(tcfg, steps=6)
+
+    # the save at the end of step 3 (which would publish step_4) dies
+    inj = FaultInjector(FaultPlan(kill_mid_save_at_step=3))
+    tr1 = _trainer(tcfg, ckpt_dir=tmp_path, inj=inj)
+    try:
+        with pytest.raises(SimulatedCrash):
+            tr1.run(tr1.init_state(jax.random.key(0)), steps=6)
+    finally:
+        inj.cleanup()
+    assert ("arm_mid_save", 3) in inj.fired
+
+    # genuine crash residue, and no torn step_*.npz
+    assert glob.glob(os.path.join(tmp_path, "*.tmp"))
+    assert checkpoint_steps(tmp_path) == [2]
+
+    tr2 = _trainer(tcfg, ckpt_dir=tmp_path)
+    _, hist2 = tr2.run(tr2.init_state(jax.random.key(0)), steps=6)
+    assert tr2.resumed_step == 2
+    assert [h["step"] for h in hist2] == [2, 3, 4, 5]
+    assert trajectories_equal(ref, hist2)
+    # the relaunch's first successful save gc-sweeps the residue
+    assert not glob.glob(os.path.join(tmp_path, "*.tmp"))
+
+
+def test_sigterm_checkpoints_then_exits(tmp_path):
+    """Preemption: a REAL SIGTERM mid-run. The in-flight step finishes, a
+    checkpoint is written, and run() returns cleanly (no exception)."""
+    tcfg = GanTrainerConfig(global_batch=2, ckpt_every=100)
+    ref = _reference(tcfg, steps=6)
+
+    inj = FaultInjector(FaultPlan(sigterm_at_step=2))
+    tr1 = _trainer(tcfg, ckpt_dir=tmp_path, inj=inj)
+    _, hist1 = tr1.run(tr1.init_state(jax.random.key(0)), steps=6)
+    assert ("sigterm", 2) in inj.fired
+    assert tr1.stopped
+    assert [h["step"] for h in hist1] == [0, 1, 2]  # in-flight step finished
+    assert latest_step(tmp_path) == 3               # ...and was checkpointed
+
+    tr2 = _trainer(tcfg, ckpt_dir=tmp_path)
+    _, hist2 = tr2.run(tr2.init_state(jax.random.key(0)), steps=6)
+    assert tr2.resumed_step == 3
+    assert trajectories_equal(ref, hist1) and trajectories_equal(ref, hist2)
+
+
+@pytest.mark.parametrize("mode", ["truncate", "garbage", "empty"])
+def test_corrupt_newest_checkpoint_falls_back(tmp_path, mode):
+    """Bit rot on the newest checkpoint: restore skips it and resumes from
+    the previous one, still on the uninterrupted trajectory."""
+    tcfg = GanTrainerConfig(global_batch=2, ckpt_every=2)
+    ref = _reference(tcfg, steps=6)
+
+    tr1 = _trainer(tcfg, ckpt_dir=tmp_path)
+    tr1.run(tr1.init_state(jax.random.key(0)), steps=4)
+    assert checkpoint_steps(tmp_path) == [2, 4]
+    corrupt_checkpoint(tmp_path, 4, mode=mode)
+
+    tr2 = _trainer(tcfg, ckpt_dir=tmp_path)
+    _, hist2 = tr2.run(tr2.init_state(jax.random.key(0)), steps=6)
+    assert tr2.resumed_step == 2
+    assert [h["step"] for h in hist2] == [2, 3, 4, 5]
+    assert trajectories_equal(ref, hist2)
+
+
+def test_stray_tmp_never_shadows_and_is_swept(tmp_path):
+    """Pre-existing crash residue: a half-written ``*.tmp`` must not be
+    mistaken for a checkpoint, must not break resume, and gets swept by the
+    first successful save's gc pass."""
+    write_stray_tmp(tmp_path)
+    assert latest_step(tmp_path) is None
+
+    tcfg = GanTrainerConfig(global_batch=2, ckpt_every=2)
+    tr = _trainer(tcfg, ckpt_dir=tmp_path)
+    _, hist = tr.run(tr.init_state(jax.random.key(0)), steps=2)
+    assert tr.resumed_step is None          # nothing (valid) to resume from
+    assert [h["step"] for h in hist] == [0, 1]
+    assert not glob.glob(os.path.join(tmp_path, "*.tmp"))
+
+
+def test_combined_faults_one_run(tmp_path):
+    """A bad-node NaN batch AND a later hard kill in the same run: the NaN
+    is skipped (and the skip count survives the crash via the checkpoint
+    extra), the kill resumes bit-exact."""
+    tcfg = GanTrainerConfig(global_batch=2, ckpt_every=2)
+
+    ref_inj = FaultInjector(FaultPlan(nan_at_steps=(1,)))
+    ref_tr = _trainer(tcfg, inj=ref_inj)
+    _, ref = ref_tr.run(ref_tr.init_state(jax.random.key(0)), steps=6)
+    assert ref_tr.skipped_steps == 1
+
+    inj = FaultInjector(FaultPlan(nan_at_steps=(1,), kill_at_step=3))
+    tr1 = _trainer(tcfg, ckpt_dir=tmp_path, inj=inj)
+    with pytest.raises(SimulatedCrash):
+        tr1.run(tr1.init_state(jax.random.key(0)), steps=6)
+
+    inj2 = FaultInjector(FaultPlan(nan_at_steps=(1,)))  # same data faults
+    tr2 = _trainer(tcfg, ckpt_dir=tmp_path, inj=inj2)
+    _, hist2 = tr2.run(tr2.init_state(jax.random.key(0)), steps=6)
+    assert tr2.resumed_step == 2
+    assert tr2.skipped_steps == 1   # restored from the checkpoint, not seen
+    assert trajectories_equal(ref, hist2)

@@ -398,3 +398,91 @@ def test_replay_rejects_unsorted_arrivals(tiny_dcgan):
     reqs = [GenRequest("dcgan", _z(rng, 1, cfg.z_dim)) for _ in range(2)]
     with pytest.raises(ValueError):
         eng.replay(reqs, [0.2, 0.1])
+
+
+# ------------------------------------------------- engine: request deadlines
+
+def test_expired_request_rejected_not_served_stale(tiny_dcgan):
+    """A queued request whose deadline passes is dropped and counted —
+    never dispatched late as if nothing happened."""
+    cfg, params = tiny_dcgan
+    clock = FakeClock()
+    eng = GanEngine(
+        BucketPolicy(buckets=(1, 2, 4), max_wait_s=999.0, max_queue=64),
+        clock=clock,
+    )
+    eng.register(cfg, params)
+    eng.warmup()
+    rng = np.random.default_rng(11)
+    impatient = GenRequest("dcgan", _z(rng, 1, cfg.z_dim), deadline_s=0.05)
+    patient = GenRequest("dcgan", _z(rng, 1, cfg.z_dim))
+    eng.submit(impatient)
+    eng.submit(patient)
+    clock.advance(0.2)             # past the impatient deadline
+    assert eng.step(drain=True)    # dispatches what's still valid
+    assert impatient.expired and not impatient.done
+    assert impatient.output is None
+    assert patient.done and not patient.expired
+    assert eng.metrics.expired == 1
+    assert eng.metrics.requests == 1   # only the served one completed
+    # the dispatched batch never contained the expired rows
+    assert eng.metrics.samples == 1
+
+
+def test_expired_mid_queue_behind_patient_head(tiny_dcgan):
+    """Deadlines are per-request: a short-deadline request can expire
+    BEHIND a patient head without disturbing FIFO order for the rest."""
+    cfg, params = tiny_dcgan
+    clock = FakeClock()
+    eng = GanEngine(
+        BucketPolicy(buckets=(1, 2, 4), max_wait_s=999.0, max_queue=64),
+        clock=clock,
+    )
+    eng.register(cfg, params)
+    eng.warmup()
+    rng = np.random.default_rng(12)
+    head = GenRequest("dcgan", _z(rng, 1, cfg.z_dim))
+    mid = GenRequest("dcgan", _z(rng, 1, cfg.z_dim), deadline_s=0.01)
+    tail = GenRequest("dcgan", _z(rng, 1, cfg.z_dim))
+    for r in (head, mid, tail):
+        eng.submit(r)
+    clock.advance(0.1)
+    assert eng.step(drain=True)
+    assert mid.expired and not mid.done
+    assert head.done and tail.done
+    assert [r.rid for r in eng.completed] == [head.rid, tail.rid]
+    assert eng.metrics.expired == 1
+
+
+def test_serve_all_expired_drains_cleanly(tiny_dcgan):
+    """step() must terminate (not spin) when everything queued expires."""
+    cfg, params = tiny_dcgan
+    clock = FakeClock()
+    eng = GanEngine(
+        BucketPolicy(buckets=(1, 2), max_wait_s=999.0, max_queue=64),
+        clock=clock,
+    )
+    eng.register(cfg, params)
+    eng.warmup()
+    rng = np.random.default_rng(13)
+    reqs = [GenRequest("dcgan", _z(rng, 1, cfg.z_dim), deadline_s=0.01)
+            for _ in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    clock.advance(1.0)
+    assert not eng.step(drain=True)   # purge drains the queue, nothing runs
+    assert eng.queued_requests == 0
+    assert all(r.expired and not r.done for r in reqs)
+    assert eng.metrics.expired == 3 and eng.metrics.batches == 0
+
+
+def test_deadline_validation(tiny_dcgan):
+    cfg, params = tiny_dcgan
+    eng = GanEngine(BucketPolicy(buckets=(1, 2), max_queue=64))
+    eng.register(cfg, params)
+    rng = np.random.default_rng(14)
+    with pytest.raises(ValueError):
+        eng.submit(GenRequest("dcgan", _z(rng, 1, cfg.z_dim), deadline_s=0.0))
+    with pytest.raises(ValueError):
+        eng.submit(GenRequest("dcgan", _z(rng, 1, cfg.z_dim),
+                              deadline_s=-1.0))

@@ -13,8 +13,13 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import segregation as seg
 from repro.core import transpose_conv as tc
+from repro.distributed.fault_tolerance import elastic_batch_schedule, shard_owner
 from repro.kernels import ref
-from repro.optim.compression import compress_int8, decompress_int8
+from repro.optim.compression import (
+    compress_int8,
+    decompress_int8,
+    error_feedback_compress,
+)
 from repro.data import SyntheticTokens
 
 SETTINGS = dict(max_examples=25, deadline=None)
@@ -75,6 +80,76 @@ def test_int8_compression_bounded_error(shape, seed, scale):
     # block-wise absmax int8: error <= blockmax/127 per element
     bound = float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
     assert float(jnp.max(jnp.abs(back - x))) <= bound * 1.01
+
+
+@given(
+    shape=st.tuples(st.integers(1, 4), st.integers(1, 65)),
+    seed=st.integers(0, 2**31 - 1),
+    rounds=st.integers(1, 4),
+)
+@settings(**SETTINGS)
+def test_error_feedback_algebra(shape, seed, rounds):
+    """The error-feedback invariant from the compression docstring:
+    after every round, ``D(q_t) + e_t == g_t + e_{t-1}`` exactly (what the
+    wire carries plus the carried error loses nothing), so the compressor's
+    only long-run effect is a bounded delay, not a bias."""
+    rng = np.random.default_rng(seed)
+    tree = {"w": jnp.asarray(rng.normal(size=shape).astype(np.float32))}
+    err = None
+    for _ in range(rounds):
+        g = {"w": jnp.asarray(rng.normal(size=shape).astype(np.float32))}
+        prev = err["w"] if err is not None else jnp.zeros(shape, jnp.float32)
+        deq, err = error_feedback_compress(g, err)
+        np.testing.assert_allclose(
+            np.asarray(deq["w"] + err["w"]), np.asarray(g["w"] + prev),
+            rtol=0, atol=1e-5,
+        )
+        assert deq["w"].shape == tree["w"].shape
+        # the carried error is itself bounded by one quantization step
+        bound = float(jnp.max(jnp.abs(g["w"] + prev))) / 127.0 + 1e-6
+        assert float(jnp.max(jnp.abs(err["w"]))) <= bound * 1.01
+
+
+@given(
+    global_batch=st.integers(1, 4096),
+    pods_total=st.integers(1, 64),
+    data=st.data(),
+)
+@settings(**SETTINGS)
+def test_elastic_batch_schedule_preserves_effective_batch(
+    global_batch, pods_total, data
+):
+    """For ANY degradation the schedule keeps the effective batch: the
+    microbatch stays runnable (>= 1), accumulation covers the global batch
+    (micro * accum >= global), and never overshoots by a full extra
+    accumulation round (micro * (accum - 1) < global)."""
+    pods_alive = data.draw(st.integers(1, pods_total))
+    micro, accum = elastic_batch_schedule(global_batch, pods_alive, pods_total)
+    assert micro >= 1 and accum >= 1
+    assert micro * accum >= global_batch
+    assert micro * (accum - 1) < global_batch
+    # full strength is the identity schedule
+    if pods_alive == pods_total:
+        assert (micro, accum) == (global_batch, 1)
+
+
+@given(
+    hosts=st.integers(1, 32),
+    shard=st.integers(0, 31),
+    start=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_shard_owner_coverage_and_rotation(hosts, shard, start):
+    """Ownership is always a valid host, rotates by exactly one host per
+    step (a straggler's shard lands elsewhere next step), and over any
+    ``hosts`` consecutive steps every host owns the shard exactly once."""
+    owners = [shard_owner(start + t, shard, hosts) for t in range(hosts)]
+    assert all(0 <= o < hosts for o in owners)
+    assert sorted(owners) == list(range(hosts))
+    if hosts > 1:
+        nxt = shard_owner(start + hosts, shard, hosts)
+        assert nxt == owners[0]  # periodic
+        assert owners[1] == (owners[0] + 1) % hosts
 
 
 @given(step=st.integers(0, 10_000), seed=st.integers(0, 100))
