@@ -74,6 +74,26 @@ def get_abstract_mesh():
     return mesh
 
 
+def get_concrete_mesh():
+    """The ambient *device-backed* mesh, or None — what :func:`use_mesh`
+    activates. Prefers the explicit concrete-mesh context, falling back to
+    the 0.4.x thread-resources physical mesh (what a plain ``with mesh:``
+    sets). Distinct from :func:`get_abstract_mesh`: an abstract mesh names
+    axes for the sharding *rules* but carries no devices, so ``shard_map``
+    over real (non-NamedSharding) arrays needs the concrete one.
+    """
+    from jax._src import mesh as mesh_lib
+
+    fn = getattr(mesh_lib, "get_concrete_mesh", None)
+    mesh = fn() if fn is not None else None
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        env = getattr(mesh_lib, "thread_resources", None)
+        mesh = getattr(getattr(env, "env", None), "physical_mesh", None)
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        return None
+    return mesh
+
+
 def abstract_mesh(axis_sizes: tuple, axis_names: tuple):
     """Construct an ``AbstractMesh`` across the two historical signatures:
     ``AbstractMesh(sizes, names)`` (new) vs ``AbstractMesh(((name, size), ...))``
@@ -213,11 +233,15 @@ def shard_plan_apply(apply_fn, params, z, plan, *, mesh=None):
     Degrades gracefully: with no mesh (or no ``pod``/``data`` axis, or a
     batch the data-parallel extent doesn't divide) it runs ``apply_fn``
     unsharded — the exact same code serves single-device tests and the
-    multi-chip dry-run, like every other helper here.
+    multi-chip dry-run, like every other helper here. The ambient mesh is
+    resolved via :func:`get_concrete_mesh` (NOT the abstract mesh an
+    axis-rule dry-run installs): ``shard_map`` can only partition plain
+    arrays over a device-backed mesh, so an abstract-only context — which
+    used to crash here mid-trace — now degrades to the unsharded path.
     """
     from jax.sharding import PartitionSpec as P
 
-    mesh = mesh if mesh is not None else get_abstract_mesh()
+    mesh = mesh if mesh is not None else get_concrete_mesh()
     if mesh is None:
         return apply_fn(params, z, plan)
     axes = tuple(mesh.axis_names)

@@ -10,6 +10,9 @@ The one import surface for the kernel zoo — ``from repro.kernels import
   autotuner's baseline candidate);
 * :func:`transpose_conv2d_pallas_gemm` — implicit-GEMM forward for the
   channel-deep, small-spatial regime (batch folds into the GEMM rows);
+* :func:`transpose_conv2d_pair_pallas` — layer-pair megafusion: two
+  stride-2 layers per launch with the interface activation VMEM-resident
+  (:func:`default_pair_tiles` / :func:`pair_vmem_bytes` size its scratch);
 * :func:`transpose_conv2d_bwd_pallas` — segregated dx + dw backward;
 * :func:`Epilogue` — the fused bias+activation tail shared by all of them.
 
@@ -30,12 +33,20 @@ from repro.kernels.transpose_conv2d_gemm import (
     default_gemm_tiles,
     transpose_conv2d_pallas_gemm,
 )
+from repro.kernels.transpose_conv2d_pair import (
+    default_pair_tiles,
+    pair_vmem_bytes,
+    transpose_conv2d_pair_pallas,
+)
 
 __all__ = [
     "Epilogue",
     "default_gemm_tiles",
+    "default_pair_tiles",
     "default_tiles",
+    "pair_vmem_bytes",
     "transpose_conv2d_bwd_pallas",
+    "transpose_conv2d_pair_pallas",
     "transpose_conv2d_pallas",
     "transpose_conv2d_pallas_gemm",
     "transpose_conv2d_pallas_phase",

@@ -12,8 +12,13 @@ schema **v3** the layer signature additionally carries the layer's fused
 bias+activation **epilogue** (:mod:`repro.kernels.epilogue` — key component
 ``e:<tag>``), and for epilogue'd layers the races compare the
 fused-epilogue Pallas kernels against their unfused
-kernel-plus-post-ops variants in every direction. Each layer record
-carries per-direction entries —
+kernel-plus-post-ops variants in every direction. Since schema **v4**
+eligible adjacent layer *pairs* additionally get their own ``|pair|``
+keys (:func:`pair_key`) whose ``pair`` entry records the fused-pair race:
+the megafusion kernel (``repro.kernels.transpose_conv2d_pair`` — both
+layers in one launch, interface activation VMEM-resident) vs two
+back-to-back fused launches. Each layer record carries per-direction
+entries —
 
 * ``fwd``   — the forward operator race (what v1 stored);
 * ``bwd``   — the backward race between the segregated Pallas backward
@@ -23,7 +28,10 @@ carries per-direction entries —
 * ``step``  — the full fwd+bwd ``value_and_grad`` race per forward method:
   the winner is what ``method="auto"`` dispatches to in **training** mode
   (``train=True``), where a forward that is fast to run but slow to
-  differentiate must lose.
+  differentiate must lose;
+* ``pair``  — on ``|pair|`` keys only: ``pallas_pair`` vs ``back_to_back``
+  (:data:`PAIR_CANDIDATES`); the winner is what the plan fusion pass
+  (``repro.kernels.plan.fuse_pairs``) consults via :func:`best_pair`.
 
 Components:
 
@@ -33,15 +41,17 @@ Components:
 * A persistent JSON cache keyed by ``(backend, batch, N, n, Cin, Cout, P,
   dtype, epilogue)``; location from ``$REPRO_AUTOTUNE_CACHE`` (default
   ``~/.cache/repro/autotune.json``). Concurrent writers last-write-win on an
-  atomic rename; the in-memory view reloads on file mtime change. **v1 and
-  v2 cache files migrate on load** (v1 flat entries become the ``fwd``
-  direction; v2 keys gain the ``e:none`` epilogue component — tuned tiles
-  survive both hops) and are rewritten as v3 on the next save; unknown
-  versions are ignored (and set aside, never clobbered, on save), and v3
-  records whose recorded winner method this build cannot dispatch (written
-  by a NEWER checkout — e.g. a kernel this build predates) are likewise
-  set aside on load: excluded from every lookup, merged back verbatim on
-  save (see :func:`known_winner_methods`).
+  atomic rename; the in-memory view reloads on file mtime change. **v1–v3
+  cache files migrate on load** (v1 flat entries become the ``fwd``
+  direction; v1/v2 keys gain the ``e:none`` epilogue component; v3 is a
+  strict subset of v4 — layer keys and records load verbatim, they simply
+  predate ``|pair|`` keys — tuned tiles survive every hop) and are
+  rewritten as v4 on the next save; unknown versions are ignored (and set
+  aside, never clobbered, on save), and v4 records whose recorded winner
+  method this build cannot dispatch (written by a NEWER checkout — e.g. a
+  kernel this build predates) are likewise set aside on load: excluded
+  from every lookup, merged back verbatim on save (see
+  :func:`known_winner_methods`).
   ``--prune`` (or :func:`prune_cache`) drops entries whose key no longer
   parses under the current schema instead of carrying them forever.
 * :func:`best_method` / :func:`best_bwd` / :func:`best_entry` — cache-only
@@ -94,12 +104,15 @@ from repro.timing import time_fn as _time_fn
 PEAK_FLOPS = 275e12
 PEAK_BW = 1.2e12
 
-_CACHE_VERSION = 3
-_DIRECTIONS = ("fwd", "bwd", "step")
-# what a well-formed v3 key looks like; --prune drops everything else
+_CACHE_VERSION = 4
+_DIRECTIONS = ("fwd", "bwd", "step", "pair")
+# what a well-formed v4 key looks like — a v3-style layer signature or a
+# |pair| fused-pair signature; --prune drops everything else
 _KEY_RE = re.compile(
     r"^[A-Za-z0-9_]+\|b\d+\|n\d+\|k\d+\|ci\d+\|co\d+\|p\d+"
     r"\|[A-Za-z0-9_.]+\|e:[A-Za-z0-9.+_-]+$"
+    r"|^[A-Za-z0-9_]+\|pair\|b\d+\|n\d+\|k\d+\|ci\d+\|mid\d+\|co\d+\|p\d+"
+    r"\|[A-Za-z0-9_.]+\|e1:[A-Za-z0-9.+_-]+\|e2:[A-Za-z0-9.+_-]+$"
 )
 # in-memory cache state; "generation" bumps whenever entries change (record,
 # clear, reload-from-disk) so 'auto' dispatch can retrace (see generation()).
@@ -119,6 +132,9 @@ _GEMM_TILES = ((128, 128, 512), (256, 128, 512), (512, 128, 512),
 # dx spatial-tile variants raced for the Pallas backward (dw races its
 # default reduction tile; the dx grid dominates the backward traffic).
 _BWD_TILES = ((8, 128), (16, 128), (8, 64), (32, 32))
+# (cin, mid, cout) channel-tile variants raced for the fused-pair kernel
+# (per shape they are snapped to dividing tiles by _pair_tile_variants).
+_PAIR_TILES = ((128, 64, 256), (256, 256, 512), (64, 128, 512))
 
 
 def cache_path() -> Path:
@@ -142,6 +158,29 @@ def layer_key(
     )
 
 
+def pair_key(
+    b: int, n_in: int, n_k: int, c0: int, c1: int, c2: int, padding: int,
+    dtype: str = "float32", backend: str | None = None,
+    *, epilogue1=None, epilogue2=None,
+) -> str:
+    """Cache key for a fused layer pair (schema v4 ``|pair|`` signature).
+
+    ``(n_in, c0) -> (c1) -> (c2)`` is the producer's input extent and the
+    channel chain; ``dtype`` is the producer's input dtype (the interface
+    is always the fp32 accumulator), and the two epilogues are the
+    interface tail and the output tail.
+    """
+    backend = backend or jax.default_backend()
+    e1 = epilib.canonical(epilogue1)
+    e2 = epilib.canonical(epilogue2)
+    t1 = "none" if e1 is None else e1.tag()
+    t2 = "none" if e2 is None else e2.tag()
+    return (
+        f"{backend}|pair|b{b}|n{n_in}|k{n_k}|ci{c0}|mid{c1}|co{c2}"
+        f"|p{padding}|{dtype}|e1:{t1}|e2:{t2}"
+    )
+
+
 def _normalize(entry: dict) -> dict:
     """Flat v1-style entries become the ``fwd`` direction of a v2 record."""
     if any(d in entry for d in _DIRECTIONS):
@@ -158,13 +197,15 @@ def _migrate_key(key: str) -> str:
 def known_winner_methods(direction: str = "fwd") -> frozenset:
     """Winner-method names THIS build can dispatch for ``direction``.
 
-    The forward-compat boundary: a v3 cache written by a newer checkout may
+    The forward-compat boundary: a v4 cache written by a newer checkout may
     record winners this build has no kernel for — those records are set
     aside on load (see :func:`_load`) instead of crashing dispatch or being
     clobbered on the next save.
     """
     if direction == "bwd":
         return frozenset(BWD_CANDIDATES)
+    if direction == "pair":
+        return frozenset(PAIR_CANDIDATES)
     from repro.core import transpose_conv as tc
 
     return frozenset(
@@ -215,21 +256,24 @@ def _load() -> dict:
             blob = json.loads(path.read_text())
             if not isinstance(blob, dict):
                 blob = {}  # valid JSON but not a cache: treat as foreign
-            if blob.get("version") == _CACHE_VERSION:
+            if blob.get("version") in (_CACHE_VERSION, 3):
+                # v3 -> v4 is purely additive (the |pair| key form): v3
+                # layer keys and records are valid v4 verbatim, they just
+                # predate pair entries. The next _save() rewrites as v4.
                 loaded = blob.get("entries", {})
             elif blob.get("version") in (1, 2):
                 # older schemas migrate in place — none of the tuned data is
                 # lost: v1 flat entries become the fwd direction, and
                 # v1/v2 keys (which predate epilogue'd signatures) become
-                # the e:none signature of v3. The next _save() rewrites the
-                # file as v3.
+                # the e:none signature of v3/v4. The next _save() rewrites
+                # the file as v4.
                 loaded = {
                     _migrate_key(k): _normalize(dict(e))
                     for k, e in blob.get("entries", {}).items()
                 }
             else:  # foreign version: don't pin stale entries as current
                 loaded = {}
-            # forward compat WITHIN v3: records whose winner method this
+            # forward compat WITHIN v4: records whose winner method this
             # build can't dispatch (written by a newer checkout) are set
             # aside — never served by lookup(), merged back on save
             _STATE["entries"], _STATE["alien"] = _partition_native(loaded)
@@ -246,7 +290,7 @@ def _save() -> None:
     try:  # never clobber a newer tool's cache: set it aside, don't destroy
         prev = json.loads(path.read_text())
         ver = prev.get("version") if isinstance(prev, dict) else None
-        if ver is not None and ver not in (1, 2, _CACHE_VERSION):
+        if ver is not None and ver not in (1, 2, 3, _CACHE_VERSION):
             path.replace(path.with_name(path.name + f".v{ver}.bak"))
     except (json.JSONDecodeError, OSError):
         pass  # corrupt/missing cache: overwriting it loses nothing
@@ -366,6 +410,20 @@ def best_bwd(
     rec = best_entry(b, n_in, n_k, cin, cout, padding, dtype,
                      epilogue=epilogue)
     return rec.get("bwd") if rec else None
+
+
+def best_pair(
+    b: int, n_in: int, n_k: int, c0: int, c1: int, c2: int, padding: int,
+    dtype: str = "float32", *, epilogue1=None, epilogue2=None,
+) -> dict | None:
+    """Cache-only consult (no measurement): a pair's ``pair`` entry or None.
+
+    This is what the plan fusion pass (``repro.kernels.plan.plan_pair``)
+    consults: the pair fuses iff the recorded winner is ``pallas_pair``.
+    """
+    rec = lookup(pair_key(b, n_in, n_k, c0, c1, c2, padding, dtype,
+                          epilogue1=epilogue1, epilogue2=epilogue2))
+    return rec.get("pair") if rec else None
 
 
 # ------------------------------------------------------------------ roofline
@@ -652,6 +710,116 @@ def best_bwd_proxy(
     return best
 
 
+def _pair_tile_variants(c0: int, c1: int, c2: int) -> tuple:
+    """Shape-feasible (cin, mid, cout) channel-tile variants for the pair
+    race: the kernel's own default leads, the static list is snapped to
+    dividing tiles (the kernel rejects non-dividing channel tiles), deduped
+    preserving order."""
+    from repro.kernels.transpose_conv2d_pair import _snap, default_pair_tiles
+
+    out = [default_pair_tiles(c0, c1, c2)]
+    for tci, tmid, tco in _PAIR_TILES:
+        v = (_snap(c0, tci), _snap(c1, tmid), _snap(c2, tco))
+        if v not in out:
+            out.append(v)
+    return tuple(out)
+
+
+def pair_roofline_proxy(
+    b: int, n_in: int, n_k: int, c0: int, c1: int, c2: int,
+    padding: int = 0, *, tile_ci: int | None = None,
+    tile_mid: int | None = None, tile_co: int | None = None,
+    dtype_bytes: int = 4, epilogue1=None, epilogue2=None,
+) -> float:
+    """Analytic seconds for the fused-pair kernel: max(compute, HBM).
+
+    Models the pair grid ``(b, n_co, n_mid, n_ci)`` exactly: the input
+    plane block is re-fetched only when its ``ci`` index changes (resident
+    across the mid sweep when ``n_ci == 1``), ``w1`` blocks stream once per
+    step, ``w2`` blocks once per ``(b, co, mid)`` step, and the output
+    block — revisited only by consecutive steps (the reduction axes are
+    innermost) — stays VMEM-resident and is written to HBM ONCE per
+    ``(b, co)``. The interface activation contributes **zero** HBM bytes
+    (it lives in the VMEM scratch accumulator); the price is the producer
+    re-running once per consumer ``cout`` tile (the ``n_co`` compute
+    factor — 1 at the default tiles for every zoo pair).
+    """
+    from repro.kernels.transpose_conv2d_pair import (
+        default_pair_tiles, pair_geometry,
+    )
+
+    g = pair_geometry(n_in, n_k, padding)
+    dci, dmid, dco = default_pair_tiles(c0, c1, c2)
+    tci = tile_ci or dci
+    tmid = tile_mid or dmid
+    tco = tile_co or dco
+    n_ci, n_mid, n_co = c0 // tci, c1 // tmid, c2 // tco
+    R, np1 = g["R"], g["np1"]
+    hp1, hp2 = g["hp1"], g["hp2"]
+    m1, m2 = g["m1"], g["m2"]
+    # producer re-runs per consumer cout tile; consumer extents are exact
+    flops = 8 * b * hp1 * hp1 * c0 * c1 * n_co
+    flops += 8 * b * hp2 * hp2 * c1 * c2
+    epi1 = epilib.canonical(epilogue1)
+    epi2 = epilib.canonical(epilogue2)
+    if epi1 is not None:
+        flops += ((int(epi1.bias) + int(epi1.act != "none"))
+                  * b * m1 * m1 * c1 * n_co)
+    if epi2 is not None:
+        flops += (int(epi2.bias) + int(epi2.act != "none")) * b * m2 * m2 * c2
+    x_fetches = b * (n_co * n_mid * n_ci if n_ci > 1 else 1)
+    in_b = x_fetches * np1 * np1 * tci * dtype_bytes
+    w1_b = b * n_co * n_mid * n_ci * 4 * R * R * tci * tmid * dtype_bytes
+    w2_b = b * n_co * n_mid * 4 * R * R * tmid * tco * dtype_bytes
+    out_b = b * n_co * (2 * hp2) * (2 * hp2) * tco * 4
+    bytes_moved = in_b + w1_b + w2_b + out_b
+    return max(flops / PEAK_FLOPS, bytes_moved / PEAK_BW)
+
+
+def back_to_back_proxy(
+    b: int, n_in: int, n_k: int, c0: int, c1: int, c2: int,
+    padding: int = 0, *, dtype_bytes: int = 4,
+    epilogue1=None, epilogue2=None,
+) -> float:
+    """Analytic seconds for the unfused reference: two back-to-back
+    ``pallas_fused`` launches, each at its proxy-best tiles, the second
+    consuming the first's fp32 output plane from HBM (the round trip the
+    pair kernel eliminates)."""
+    m1 = seg.output_size(n_in, n_k, padding)
+    _, (th1, tw1) = best_fused_proxy(
+        b, n_in, n_k, c0, c1, padding, dtype_bytes=dtype_bytes
+    )
+    t1 = roofline_proxy(
+        "pallas_fused", b, n_in, n_k, c0, c1, padding,
+        tile_h=th1, tile_w=tw1, dtype_bytes=dtype_bytes, epilogue=epilogue1,
+    )
+    _, (th2, tw2) = best_fused_proxy(b, m1, n_k, c1, c2, padding)
+    t2 = roofline_proxy(
+        "pallas_fused", b, m1, n_k, c1, c2, padding,
+        tile_h=th2, tile_w=tw2, epilogue=epilogue2,
+    )
+    return t1 + t2
+
+
+def best_pair_proxy(
+    b: int, n_in: int, n_k: int, c0: int, c1: int, c2: int,
+    padding: int = 0, *, dtype_bytes: int = 4,
+    epilogue1=None, epilogue2=None,
+) -> tuple[float, tuple[int, int, int]]:
+    """Best (seconds, (tile_ci, tile_mid, tile_co)) over the pair variants."""
+    best = None
+    for tci, tmid, tco in _pair_tile_variants(c0, c1, c2):
+        t = pair_roofline_proxy(
+            b, n_in, n_k, c0, c1, c2, padding,
+            tile_ci=tci, tile_mid=tmid, tile_co=tco,
+            dtype_bytes=dtype_bytes, epilogue1=epilogue1,
+            epilogue2=epilogue2,
+        )
+        if best is None or t < best[0]:
+            best = (t, (tci, tmid, tco))
+    return best
+
+
 # ------------------------------------------------------------------- tuning
 
 # lax-based candidates always race on wall clock
@@ -661,6 +829,8 @@ LAX_CANDIDATES = (
 PALLAS_CANDIDATES = ("pallas_fused", "pallas_phase", "pallas_gemm")
 DEFAULT_CANDIDATES = LAX_CANDIDATES + PALLAS_CANDIDATES
 BWD_CANDIDATES = ("lax", "pallas")
+# the schema-v4 pair race: one megafused launch vs two fused launches
+PAIR_CANDIDATES = ("pallas_pair", "back_to_back")
 
 
 def _layer_fn(padding, method, epi):
@@ -1055,9 +1225,134 @@ def tune_layer(
     return lookup(key)
 
 
+def tune_pair(
+    b: int, n_in: int, n_k: int, c0: int, c1: int, c2: int,
+    padding: int = 0, *, dtype=jnp.float32, methods: tuple | None = None,
+    repeats: int = 3, warmup: int = 1, persist: bool = True,
+    include_pallas: bool | None = None, epilogue1=None, epilogue2=None,
+) -> dict:
+    """Race the fused-pair kernel vs back-to-back launches for one pair.
+
+    Records (and returns) the ``pair`` entry under the pair's schema-v4
+    key. On a real accelerator both candidates race on wall clock — the
+    pair kernel over its channel-tile variants, back-to-back as two
+    ``pallas_fused`` launches at their proxy-best tiles. On CPU *neither*
+    candidate is wall-clockable (both are Pallas kernels, interpret-mode
+    only), so the record is written from the roofline proxies with
+    ``source="proxy"`` and — by the same convention as the layer
+    directions — the conservative ``back_to_back`` winner: interpret-mode
+    fusion never wins dispatch, while both proxies stay in the record for
+    the benchmark gate.
+    """
+    backend = jax.default_backend()
+    epi1 = epilib.canonical(epilogue1)
+    epi2 = epilib.canonical(epilogue2)
+    if include_pallas is None:
+        include_pallas = backend == "tpu"
+    methods = tuple(methods or PAIR_CANDIDATES)
+    unknown = sorted(set(methods) - set(PAIR_CANDIDATES))
+    if unknown:
+        raise ValueError(
+            f"unknown pair method(s) {unknown}; valid: {PAIR_CANDIDATES}"
+        )
+    itemsize = jnp.dtype(dtype).itemsize
+    pair_s, pair_tiles = best_pair_proxy(
+        b, n_in, n_k, c0, c1, c2, padding, dtype_bytes=itemsize,
+        epilogue1=epi1, epilogue2=epi2,
+    )
+    proxy = {
+        "pallas_pair": pair_s,
+        "back_to_back": back_to_back_proxy(
+            b, n_in, n_k, c0, c1, c2, padding, dtype_bytes=itemsize,
+            epilogue1=epi1, epilogue2=epi2,
+        ),
+    }
+    key = pair_key(b, n_in, n_k, c0, c1, c2, padding,
+                   str(jnp.dtype(dtype)), backend,
+                   epilogue1=epi1, epilogue2=epi2)
+    if not include_pallas:
+        entry = {
+            "method": "back_to_back",
+            "time_s": proxy["back_to_back"],
+            "source": "proxy",
+            "candidates": {},
+            "proxy": proxy,
+        }
+        record(key, entry, direction="pair", persist=persist)
+        return lookup(key)
+
+    from repro.kernels.transpose_conv2d import transpose_conv2d_pallas
+    from repro.kernels.transpose_conv2d_pair import (
+        transpose_conv2d_pair_pallas,
+    )
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, n_in, n_in, c0)), dtype=dtype)
+    k1 = jnp.asarray(rng.normal(size=(n_k, n_k, c0, c1)) * 0.05, dtype=dtype)
+    k2 = jnp.asarray(rng.normal(size=(n_k, n_k, c1, c2)) * 0.05, dtype=dtype)
+    b1 = b2 = None
+    if epi1 is not None and epi1.bias:
+        b1 = jnp.asarray(rng.normal(size=(c1,)) * 0.1, dtype=jnp.float32)
+    if epi2 is not None and epi2.bias:
+        b2 = jnp.asarray(rng.normal(size=(c2,)) * 0.1, dtype=jnp.float32)
+
+    candidates: dict[str, float] = {}
+    tiles = pair_tiles
+    if "pallas_pair" in methods:
+        times = {}
+        for tci, tmid, tco in _pair_tile_variants(c0, c1, c2):
+            times[(tci, tmid, tco)] = _time_fn(
+                jax.jit(
+                    lambda x, k1, k2, _t=(tci, tmid, tco):
+                    transpose_conv2d_pair_pallas(
+                        x, k1, k2, padding,
+                        cin_tile=_t[0], mid_tile=_t[1], cout_tile=_t[2],
+                        epilogue1=epi1, bias1=b1,
+                        epilogue2=epi2, bias2=b2,
+                    )
+                ),
+                x, k1, k2, repeats=repeats, warmup=warmup,
+            )
+        tiles, best = min(times.items(), key=lambda kv: kv[1])
+        candidates["pallas_pair"] = best
+    if "back_to_back" in methods:
+        m1 = seg.output_size(n_in, n_k, padding)
+        _, (th1, tw1) = best_fused_proxy(
+            b, n_in, n_k, c0, c1, padding, dtype_bytes=itemsize
+        )
+        _, (th2, tw2) = best_fused_proxy(b, m1, n_k, c1, c2, padding)
+
+        def b2b(x, k1, k2):
+            y1 = transpose_conv2d_pallas(
+                x, k1, padding, tile_h=th1, tile_w=tw1,
+                epilogue=epi1, bias=b1,
+            )
+            return transpose_conv2d_pallas(
+                y1, k2, padding, tile_h=th2, tile_w=tw2,
+                epilogue=epi2, bias=b2,
+            )
+
+        candidates["back_to_back"] = _time_fn(
+            jax.jit(b2b), x, k1, k2, repeats=repeats, warmup=warmup,
+        )
+
+    winner = min(candidates, key=candidates.get)
+    entry = {
+        "method": winner,
+        "time_s": candidates[winner],
+        "source": "measured",
+        "candidates": {str(k): v for k, v in candidates.items()},
+        "proxy": proxy,
+    }
+    if winner == "pallas_pair":
+        entry["tile_ci"], entry["tile_mid"], entry["tile_co"] = tiles
+    record(key, entry, direction="pair", persist=persist)
+    return lookup(key)
+
+
 def tune_gan_zoo(
     *, batch: int = 1, repeats: int = 3, persist: bool = True,
-    train: bool = False, epilogues: bool = True,
+    train: bool = False, epilogues: bool = True, pairs: bool = True,
     methods: tuple | None = None, include_pallas: bool | None = None,
 ) -> dict[str, dict]:
     """Tune every distinct Table-4 GAN layer shape; returns {key: record}.
@@ -1067,7 +1362,14 @@ def tune_gan_zoo(
     (relu mid-stack, tanh on the output layer —
     :func:`repro.models.gan.generator_epilogues`). ``epilogues=False``
     tunes the bare transpose-conv signatures (the pre-v3 behaviour).
+
+    ``pairs=True`` (default, requires ``epilogues``) additionally runs the
+    schema-v4 pair race on every fusion-eligible adjacent pair — the same
+    greedy left-to-right pairing and VMEM-budget screen the plan pass
+    (``repro.kernels.plan.fuse_pairs``) applies, so a zoo sweep warms
+    exactly the keys :func:`best_pair` will consult.
     """
+    from repro.kernels import transpose_conv2d_pair as pairlib
     from repro.models.gan import GAN_ZOO, generator_epilogues
 
     out = {}
@@ -1086,6 +1388,32 @@ def tune_gan_zoo(
                                train=train, epilogue=epi, methods=methods,
                                include_pallas=include_pallas)
             out[layer_key(*sig, epilogue=epi)] = entry
+        if not (pairs and epilogues):
+            continue
+        # greedy left-to-right adjacent pairing, like fuse_pairs
+        i = 0
+        while i + 1 < len(cfg.layers):
+            (hw1, c0, c1), (hw2, c1b, c2) = cfg.layers[i], cfg.layers[i + 1]
+            legal = (
+                c1b == c1
+                and hw2 == seg.output_size(hw1, cfg.kernel, cfg.padding)
+                and pairlib.pair_vmem_bytes(
+                    hw1, cfg.kernel, c0, c1, c2, cfg.padding
+                ) <= pairlib.PAIR_VMEM_BUDGET_BYTES
+            )
+            if not legal:
+                i += 1
+                continue
+            sig = (batch, hw1, cfg.kernel, c0, c1, c2, cfg.padding)
+            psig = (sig, epis[i], epis[i + 1])
+            if psig not in seen:
+                seen.add(psig)
+                entry = tune_pair(*sig, repeats=repeats, persist=persist,
+                                  include_pallas=include_pallas,
+                                  epilogue1=epis[i], epilogue2=epis[i + 1])
+                out[pair_key(*sig, epilogue1=epis[i],
+                             epilogue2=epis[i + 1])] = entry
+            i += 2
     return out
 
 
@@ -1097,6 +1425,7 @@ def main(argv=None):
     PYTHONPATH=src python -m repro.kernels.autotune --layer 1 8 4 512 256 2
     PYTHONPATH=src python -m repro.kernels.autotune --layer 8 4 4 1024 512 2 \\
         --methods pallas_gemm,pallas_fused --include-pallas
+    PYTHONPATH=src python -m repro.kernels.autotune --pair 1 8 4 512 256 128 2
     PYTHONPATH=src python -m repro.kernels.autotune --prune
     """
     import argparse
@@ -1105,9 +1434,17 @@ def main(argv=None):
     g = ap.add_mutually_exclusive_group(required=True)
     g.add_argument("--gan-zoo", action="store_true",
                    help="tune every distinct Table-4 GAN layer shape "
-                        "(fused with the generator epilogues by default)")
+                        "(fused with the generator epilogues by default) "
+                        "plus the pair race on fusion-eligible adjacent "
+                        "pairs")
     g.add_argument("--layer", nargs=6, type=int,
                    metavar=("B", "N", "K", "CIN", "COUT", "PAD"))
+    g.add_argument("--pair", nargs=7, type=int,
+                   metavar=("B", "N", "K", "CIN", "CMID", "COUT", "PAD"),
+                   help="race the fused-pair kernel vs back-to-back "
+                        "launches for one adjacent layer pair (relu-bias "
+                        "interface + tanh-bias output epilogues unless "
+                        "--no-epilogue)")
     g.add_argument("--prune", action="store_true",
                    help="drop cache entries whose layer signature no "
                         "longer parses under the current schema version")
@@ -1128,16 +1465,22 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     methods = None
+    pair_methods = None
     if args.methods:
         methods = tuple(
             s.strip() for s in args.methods.split(",") if s.strip()
         )
-        unknown = sorted(set(methods) - set(DEFAULT_CANDIDATES))
+        valid = DEFAULT_CANDIDATES + PAIR_CANDIDATES
+        unknown = sorted(set(methods) - set(valid))
         if unknown:
             ap.error(
                 f"unknown method(s): {', '.join(unknown)}; "
-                f"valid: {', '.join(DEFAULT_CANDIDATES)}"
+                f"valid: {', '.join(valid)}"
             )
+        pair_methods = tuple(m for m in methods if m in PAIR_CANDIDATES)
+        methods = tuple(m for m in methods if m in DEFAULT_CANDIDATES)
+        methods = methods or None
+        pair_methods = pair_methods or None
     include_pallas = True if args.include_pallas else None
 
     if args.prune:
@@ -1155,6 +1498,18 @@ def main(argv=None):
                                epilogues=not args.no_epilogue,
                                methods=methods,
                                include_pallas=include_pallas)
+    elif args.pair:
+        epi1 = epi2 = None
+        if not args.no_epilogue:
+            epi1 = epilib.make(True, "relu")
+            epi2 = epilib.make(True, "tanh")
+        entry = tune_pair(*args.pair, repeats=args.repeats,
+                          methods=pair_methods,
+                          include_pallas=include_pallas,
+                          epilogue1=epi1, epilogue2=epi2)
+        entries = {
+            pair_key(*args.pair, epilogue1=epi1, epilogue2=epi2): entry
+        }
     else:
         entry = tune_layer(*args.layer, repeats=args.repeats,
                            train=args.train, methods=methods,
@@ -1171,6 +1526,8 @@ def main(argv=None):
                      if "tile_h" in e else "")
             if "tile_m" in e:
                 extra = f"[{e['tile_m']}x{e['tile_n']}x{e['tile_k']}]"
+            if "tile_ci" in e:
+                extra = f"[{e['tile_ci']}x{e['tile_mid']}x{e['tile_co']}]"
             parts.append(f"{d}={e['method']}{extra} {e['time_s']:.6f}s")
         print(f"{key} -> " + "  ".join(parts))
 

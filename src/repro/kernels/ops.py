@@ -54,6 +54,9 @@ from repro.kernels.transpose_conv2d_bwd import transpose_conv2d_bwd_pallas
 from repro.kernels.transpose_conv2d_gemm import (
     transpose_conv2d_pallas_gemm as _pallas_gemm_fwd,
 )
+from repro.kernels.transpose_conv2d_pair import (
+    transpose_conv2d_pair_pallas as _pallas_pair_fwd,
+)
 
 BWD_METHODS = ("auto", "pallas", "lax")
 
@@ -281,3 +284,59 @@ def _gemm_bwd(padding, tile_m, tile_n, tile_k, bwd, epilogue, res, g):
 
 
 transpose_conv2d_pallas_gemm.defvjp(_gemm_fwd, _gemm_bwd)
+
+
+def _pair_run(fp, x, k1, k2, bias1, bias2):
+    return _pallas_pair_fwd(
+        x, k1, k2, fp.padding,
+        cin_tile=fp.tile_ci, mid_tile=fp.tile_mid, cout_tile=fp.tile_co,
+        epilogue1=fp.first.epilogue, bias1=bias1,
+        epilogue2=fp.second.epilogue, bias2=bias2,
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def transpose_conv2d_pair(fp, x, k1, k2, bias1, bias2):
+    """Fused layer-pair Pallas forward (VMEM-resident interface), per-layer
+    tuned backward.
+
+    ``fp`` is the static :class:`~repro.kernels.plan.FusedPairPlan` — it
+    carries the pair-kernel channel tiles AND both layers' resolved
+    per-layer plans. The forward runs both layers from one launch with the
+    interface activation held in a VMEM scratch accumulator. Fusion is
+    forward/serving-first: the custom VJP recomputes the interface via the
+    producer's own :func:`~repro.kernels.plan.execute_layer` path and then
+    chains the two layers' EXISTING tuned backwards (``bwd_method`` + dx
+    tiles from each ``LayerPlan``), so pair gradients are bit-for-bit the
+    back-to-back machinery.
+    """
+    return _pair_run(fp, x, k1, k2, bias1, bias2)
+
+
+def _pair_fwd(fp, x, k1, k2, bias1, bias2):
+    y2 = _pair_run(fp, x, k1, k2, bias1, bias2)
+    # residuals are the pair's true inputs only: the interface is
+    # recomputed in the backward (it was never materialized forward)
+    return y2, (x, k1, k2, bias1, bias2)
+
+
+def _pair_bwd(fp, res, g):
+    from repro.kernels import plan as planlib
+
+    x, k1, k2, bias1, bias2 = res
+    lp1, lp2 = fp.first, fp.second
+
+    def layer1(x, k1, b1):
+        return planlib.execute_layer(lp1, x, k1, bias=b1)
+
+    def layer2(y1, k2, b2):
+        return planlib.execute_layer(lp2, y1.astype(lp2.dtype), k2, bias=b2)
+
+    y1, vjp1 = jax.vjp(layer1, x, k1, bias1)
+    _, vjp2 = jax.vjp(layer2, y1, k2, bias2)
+    dy1, dk2, db2 = vjp2(g)
+    dx, dk1, db1 = vjp1(dy1)
+    return dx, dk1, dk2, db1, db2
+
+
+transpose_conv2d_pair.defvjp(_pair_fwd, _pair_bwd)

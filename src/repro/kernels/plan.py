@@ -50,6 +50,15 @@ Resolution rules (identical to the dispatch they replace):
   resolves the whole ``act(tconv + b)`` unit, including whether the Pallas
   kernels run the epilogue in-kernel or as composed post-ops
   (``fuse_epilogue``, raced by the autotuner since cache schema v3).
+* layer-pair fusion — :func:`fuse_pairs` (run by :func:`compile_plan` for
+  serving-mode plans) walks the compiled stack, checks pair legality
+  (adjacent stride-2 tconv -> tconv, bias epilogue on the interface, the
+  producer's whole output plane + consumer halo within the VMEM budget of
+  :func:`repro.kernels.transpose_conv2d_pair.pair_vmem_bytes`) and replaces
+  eligible adjacent ``LayerPlan`` pairs with a :class:`FusedPairPlan` when
+  the autotuner's ``pair`` race (cache schema v4) picked the fused kernel —
+  the interface activation then never touches HBM. Train-mode plans stay
+  unfused: gradients always flow through the per-layer tuned backward.
 """
 from __future__ import annotations
 
@@ -125,8 +134,69 @@ class LayerPlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class FusedPairPlan:
+    """TWO adjacent :class:`LayerPlan`s resolved to one fused-pair launch
+    (:func:`repro.kernels.transpose_conv2d_pair.transpose_conv2d_pair_pallas`).
+
+    The per-layer plans are kept verbatim: they are the racing baseline
+    (back-to-back launches), the fallback when an entry is executed
+    standalone, and the backward path — gradients through a fused pair
+    recompute the interface and fall back to each layer's tuned backward.
+    Immutable + hashable like every plan object (static jit key).
+    """
+
+    first: LayerPlan
+    second: LayerPlan
+    # tuned pair-kernel channel tiles (None = kernel defaults)
+    tile_ci: int | None = None
+    tile_mid: int | None = None
+    tile_co: int | None = None
+    source: str = dataclasses.field(default="cold", compare=False)
+
+    # what the pair executes as (class attribute, not a field: every
+    # FusedPairPlan IS the fused kernel — a back-to-back winner simply
+    # stays two LayerPlans)
+    method = "pallas_pair"
+
+    @property
+    def batch(self) -> int:
+        return self.first.batch
+
+    @property
+    def padding(self) -> int:
+        return self.first.padding
+
+    @property
+    def epilogue(self):
+        """The pair's OUTPUT epilogue (the interface epilogue is
+        ``first.epilogue``, applied on the fp32 scratch accumulator)."""
+        return self.second.epilogue
+
+    def describe(self) -> str:
+        tiles = ""
+        if self.tile_ci or self.tile_mid or self.tile_co:
+            tiles = f"[{self.tile_ci}x{self.tile_mid}x{self.tile_co}]"
+        return (
+            f"{self.first.n_in}x{self.first.n_in}x{self.first.cin}"
+            f"->{self.first.cout}->{self.second.cout} "
+            f"k{self.first.n_k} p{self.padding} b{self.batch} "
+            f"{self.first.dtype}: fwd=pallas_pair{tiles} "
+            f"iface={self.first.epilogue.tag()}@vmem "
+            f"epi={self.second.epilogue.tag()} ({self.source})"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class TconvPlan:
-    """An ordered stack of :class:`LayerPlan`s for a whole generator.
+    """An ordered stack of plan entries for a whole generator.
+
+    ``layers`` holds the plan ENTRIES in execution order — ``LayerPlan``s,
+    with eligible adjacent pairs possibly replaced by a
+    :class:`FusedPairPlan` (the :func:`fuse_pairs` pass). Logical-layer
+    views are preserved: ``len(plan)``/iteration/indexing flatten fused
+    pairs back to per-layer ``LayerPlan``s, so a plan always matches its
+    config's layer count and any logical layer can still be executed (or
+    differentiated) standalone. Executors walk ``plan.entries`` instead.
 
     Immutable and hashable: close over it (or pass it as a static jit
     argument) and the traced computation is pinned — per-call dispatch is
@@ -135,22 +205,46 @@ class TconvPlan:
     """
 
     name: str
-    layers: tuple  # tuple[LayerPlan, ...]
+    layers: tuple  # tuple[LayerPlan | FusedPairPlan, ...] — entries
+
+    @property
+    def entries(self) -> tuple:
+        """Plan entries in execution order (pairs NOT flattened)."""
+        return self.layers
+
+    @functools.cached_property
+    def _logical(self) -> tuple:
+        out = []
+        for e in self.layers:
+            if isinstance(e, FusedPairPlan):
+                out.extend((e.first, e.second))
+            else:
+                out.append(e)
+        return tuple(out)
 
     def __len__(self) -> int:
-        return len(self.layers)
+        return len(self._logical)
 
     def __iter__(self):
-        return iter(self.layers)
+        return iter(self._logical)
 
     def __getitem__(self, i) -> LayerPlan:
-        return self.layers[i]
+        return self._logical[i]
 
     def describe(self) -> str:
-        head = f"TconvPlan({self.name}, {len(self.layers)} layers)"
-        return "\n".join([head] + [
-            f"  [{i}] {lp.describe()}" for i, lp in enumerate(self.layers)
-        ])
+        n_pairs = sum(isinstance(e, FusedPairPlan) for e in self.layers)
+        head = f"TconvPlan({self.name}, {len(self)} layers"
+        head += f", {n_pairs} fused pairs)" if n_pairs else ")"
+        lines = [head]
+        i = 0
+        for e in self.layers:
+            if isinstance(e, FusedPairPlan):
+                lines.append(f"  [{i}-{i + 1}] {e.describe()}")
+                i += 2
+            else:
+                lines.append(f"  [{i}] {e.describe()}")
+                i += 1
+        return "\n".join(lines)
 
 
 def _cold_fwd(n_in: int, n_k: int, padding: int) -> str:
@@ -289,8 +383,128 @@ def plan_layer_cached(
     )
 
 
+# --------------------------------------------------------------- pair fusion
+
+def pair_legal(lp1: LayerPlan, lp2: LayerPlan) -> tuple[bool, str]:
+    """Legality of fusing two adjacent layer plans into one pair launch.
+
+    Checks the stride-2 tconv -> tconv chain (consumer input extent equals
+    the producer output extent, channel chain intact, same kernel/padding),
+    a bias-carrying epilogue on the interface AND the output (the pair
+    kernel applies both on fp32 accumulators), the fp32 interface contract,
+    and the VMEM budget: the producer's whole output plane + the consumer's
+    halo + both sub-kernel stacks must fit
+    :data:`repro.kernels.transpose_conv2d_pair.PAIR_VMEM_BUDGET_BYTES`.
+    Returns ``(ok, reason)`` — the reason string names the failed check.
+    """
+    from repro.kernels import transpose_conv2d_pair as pairlib
+
+    if lp1.batch != lp2.batch:
+        return False, f"batch mismatch ({lp1.batch} vs {lp2.batch})"
+    if lp1.n_k != lp2.n_k or lp1.padding != lp2.padding:
+        return False, "kernel/padding mismatch"
+    m1 = seg.output_size(lp1.n_in, lp1.n_k, lp1.padding)
+    if lp2.n_in != m1:
+        return False, f"not adjacent (consumer n_in {lp2.n_in} != M1 {m1})"
+    if lp1.cout != lp2.cin:
+        return False, f"channel chain broken ({lp1.cout} -> {lp2.cin})"
+    epi1, epi2 = lp1.epilogue, lp2.epilogue
+    if epi1 is None or not epi1.bias:
+        return False, "no bias epilogue on the interface"
+    if epi2 is None or not epi2.bias:
+        return False, "no bias epilogue on the output"
+    if lp2.dtype != "float32":
+        return False, (
+            f"consumer dtype {lp2.dtype} != float32 (the interface is the "
+            "fp32 accumulator)"
+        )
+    if lp1.dtype not in ("float32", "bfloat16"):
+        return False, f"unsupported producer dtype {lp1.dtype}"
+    need = pairlib.pair_vmem_bytes(
+        lp1.n_in, lp1.n_k, lp1.cin, lp1.cout, lp2.cout, lp1.padding,
+        dtype_bytes=2 if lp1.dtype == "bfloat16" else 4,
+    )
+    if need > pairlib.PAIR_VMEM_BUDGET_BYTES:
+        return False, (
+            f"VMEM estimate {need} B > budget "
+            f"{pairlib.PAIR_VMEM_BUDGET_BYTES} B"
+        )
+    return True, "ok"
+
+
+def plan_pair(lp1: LayerPlan, lp2: LayerPlan, *,
+              fuse="auto") -> FusedPairPlan | None:
+    """Resolve whether an adjacent pair fuses. Returns the
+    :class:`FusedPairPlan` or None (= stay back-to-back).
+
+    ``fuse="auto"`` consults the autotuner's ``pair`` race (cache schema
+    v4): the pair fuses iff the recorded winner is the fused kernel, with
+    tuned channel tiles picked up; a cold cache mirrors the cold-backward
+    napkin rule (fuse on a real accelerator backend, stay back-to-back on
+    CPU where Pallas only interprets). ``fuse=True``/``"force"`` fuses
+    every legal pair regardless of the race; ``fuse=False``/``"off"``
+    never fuses. Illegal pairs never fuse.
+    """
+    from repro.kernels import autotune
+
+    if fuse is False or fuse == "off":
+        return None
+    ok, _why = pair_legal(lp1, lp2)
+    if not ok:
+        return None
+    if fuse in (True, "force"):
+        return FusedPairPlan(first=lp1, second=lp2, source="forced")
+    rec = autotune.best_pair(
+        lp1.batch, lp1.n_in, lp1.n_k, lp1.cin, lp1.cout, lp2.cout,
+        lp1.padding, lp1.dtype,
+        epilogue1=lp1.epilogue, epilogue2=lp2.epilogue,
+    )
+    if rec is not None:
+        if rec.get("method") == "pallas_pair":
+            return FusedPairPlan(
+                first=lp1, second=lp2,
+                tile_ci=rec.get("tile_ci"), tile_mid=rec.get("tile_mid"),
+                tile_co=rec.get("tile_co"), source="tuned",
+            )
+        return None  # the race picked back-to-back launches
+    if jax.default_backend() == "tpu":
+        return FusedPairPlan(first=lp1, second=lp2, source="cold")
+    return None
+
+
+def fuse_pairs(plan: TconvPlan, *, train: bool = False,
+               fuse="auto") -> TconvPlan:
+    """The plan-level fusion pass: legality -> VMEM estimate -> race winner
+    -> :class:`FusedPairPlan` substitution.
+
+    Walks the logical layer stack greedily left-to-right, fusing each
+    eligible adjacent pair per :func:`plan_pair` (a fused layer is consumed
+    and the walk continues after it). Train-mode plans are returned
+    unfused: fusion is forward/serving-first, and gradients always use the
+    per-layer tuned backward. Idempotent — refusing a plan re-flattens and
+    re-resolves, so a generation bump can change the decisions.
+    """
+    if train or fuse is False or fuse == "off":
+        return plan
+    logical = tuple(plan)  # flatten any existing fusion first
+    entries: list = []
+    i = 0
+    while i < len(logical):
+        fp = None
+        if i + 1 < len(logical):
+            fp = plan_pair(logical[i], logical[i + 1], fuse=fuse)
+        if fp is not None:
+            entries.append(fp)
+            i += 2
+        else:
+            entries.append(logical[i])
+            i += 1
+    return TconvPlan(name=plan.name, layers=tuple(entries))
+
+
 def compile_plan(cfg, batch: int, dtype="float32", *, train: bool = False,
-                 method: str = "auto", epilogues=None) -> TconvPlan:
+                 method: str = "auto", epilogues=None,
+                 fuse="auto") -> TconvPlan:
     """Compile a whole-generator :class:`TconvPlan` from the autotune cache.
 
     ``cfg`` is a GAN config (anything with ``layers`` as ``(input_hw, cin,
@@ -304,6 +518,11 @@ def compile_plan(cfg, batch: int, dtype="float32", *, train: bool = False,
     layer's bias+activation tail into its plan —
     :func:`repro.models.gan.generator_plan` derives the generator's
     (bias+relu ... bias+tanh) stack automatically.
+
+    Serving-mode plans (``train=False``) then run the :func:`fuse_pairs`
+    pass, controlled by ``fuse`` (``"auto"`` — pair-race winner / cold
+    rule, ``True``/``"force"`` — every legal pair, ``False``/``"off"`` —
+    never).
     """
     import jax.numpy as jnp
 
@@ -320,12 +539,13 @@ def compile_plan(cfg, batch: int, dtype="float32", *, train: bool = False,
                    method=method, train=train, epilogue=epi)
         for (hw, cin, cout), epi in zip(cfg.layers, epilogues)
     )
-    return TconvPlan(name=getattr(cfg, "name", "tconv"), layers=layers)
+    plan = TconvPlan(name=getattr(cfg, "name", "tconv"), layers=layers)
+    return fuse_pairs(plan, train=train, fuse=fuse)
 
 
 def compile_plan_buckets(cfg, batches, dtype="float32", *,
                          train: bool = False, method: str = "auto",
-                         epilogues=None) -> dict:
+                         epilogues=None, fuse="auto") -> dict:
     """Compile one :class:`TconvPlan` per batch bucket: ``{batch: plan}``.
 
     The serving engine (and the serving benchmark) run a fixed set of batch
@@ -358,7 +578,9 @@ def compile_plan_buckets(cfg, batches, dtype="float32", *,
                               dt, method=method, train=train, epilogue=epi)
             for (hw, cin, cout), epi in zip(cfg.layers, epilogues)
         )
-        plans[batch] = TconvPlan(name=name, layers=layers)
+        plans[batch] = fuse_pairs(
+            TconvPlan(name=name, layers=layers), train=train, fuse=fuse
+        )
     return plans
 
 
@@ -373,6 +595,12 @@ def execute_layer(lp: LayerPlan, x, kernel, *, bias=None, precision=None):
     the identical :meth:`Epilogue.apply` post-ops, so every method stays
     numerically interchangeable.
     """
+    if isinstance(lp, FusedPairPlan):
+        raise TypeError(
+            "a FusedPairPlan spans two layers (two kernels, two biases) — "
+            "execute it via execute_pair, or execute its .first/.second "
+            "LayerPlans standalone"
+        )
     if (x.shape[1], kernel.shape[0], kernel.shape[2], kernel.shape[3]) != (
         lp.n_in, lp.n_k, lp.cin, lp.cout
     ) or str(x.dtype) != lp.dtype:
@@ -418,3 +646,41 @@ def execute_layer(lp: LayerPlan, x, kernel, *, bias=None, precision=None):
     if epi is not None:
         y = epi.apply(y, bias)
     return y
+
+
+def execute_pair(fp: FusedPairPlan, x, k1, k2, *, bias1=None, bias2=None):
+    """Run one fused layer pair from a single pair-kernel launch.
+
+    Trace-time only, like :func:`execute_layer`. ``k1``/``bias1`` belong to
+    the producer (interface epilogue, applied on the fp32 VMEM scratch
+    accumulator), ``k2``/``bias2`` to the consumer. Differentiable: the
+    custom VJP (:func:`repro.kernels.ops.transpose_conv2d_pair`) recomputes
+    the interface and falls back to each layer's tuned per-layer backward.
+    """
+    lp1, lp2 = fp.first, fp.second
+    if (x.shape[1], k1.shape[0], k1.shape[2], k1.shape[3]) != (
+        lp1.n_in, lp1.n_k, lp1.cin, lp1.cout
+    ) or str(x.dtype) != lp1.dtype:
+        raise ValueError(
+            f"FusedPairPlan mismatch: pair is {fp.describe()!r}, got input "
+            f"{x.shape}/{x.dtype} k1 {k1.shape}"
+        )
+    if (k2.shape[0], k2.shape[2], k2.shape[3]) != (
+        lp2.n_k, lp2.cin, lp2.cout
+    ):
+        raise ValueError(
+            f"FusedPairPlan mismatch: pair is {fp.describe()!r}, "
+            f"got k2 {k2.shape}"
+        )
+    for name, epi, bias in (
+        ("interface", lp1.epilogue, bias1), ("output", lp2.epilogue, bias2)
+    ):
+        if (epi is not None and epi.bias) != (bias is not None):
+            raise ValueError(
+                f"FusedPairPlan {name} epilogue mismatch: pair is "
+                f"{fp.describe()!r}, got "
+                f"bias={'set' if bias is not None else None}"
+            )
+    from repro.kernels import ops
+
+    return ops.transpose_conv2d_pair(fp, x, k1, k2, bias1, bias2)

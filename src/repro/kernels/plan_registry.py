@@ -1,0 +1,132 @@
+"""Plan-registry serialization: compiled dispatch decisions as a JSON file.
+
+A compiled :class:`~repro.kernels.plan.TconvPlan` is the *output* of the
+expensive part of bringing a generator up — autotune-cache consults (or
+races), the cold-cache napkin rules, and the pair-fusion pass — baked into
+an immutable record of resolved methods, tiles, epilogues, and fusion
+decisions. This module persists that record: a **plan registry** maps
+string keys (the serving engine uses ``"{model}:{batch}"``) to serialized
+plans, so a warm start (``GanEngine.warmup(registry_path=...)``) rebuilds
+the exact plans a previous process resolved without consulting the
+autotune cache at all — the cross-process analogue of the compile-once
+idiom, and the deployment story for machines that tune once and serve from
+a pinned artifact thereafter.
+
+The format is deliberately dumb JSON (``version: 1``): every
+:class:`~repro.kernels.plan.LayerPlan` field verbatim, epilogues as
+``{bias, act, slope}``, fused pairs as ``kind: "pair"`` entries carrying
+both constituent layer plans plus the tuned channel tiles. Loaded plans
+are marked ``source="registry"`` unless the file recorded a provenance.
+Writes are atomic (tempfile + rename), like the autotune cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from pathlib import Path
+
+from repro.kernels.epilogue import Epilogue
+from repro.kernels.plan import FusedPairPlan, LayerPlan, TconvPlan
+
+REGISTRY_VERSION = 1
+
+_LAYER_FIELDS = tuple(f.name for f in dataclasses.fields(LayerPlan))
+
+
+def _epi_to_json(epi: Epilogue | None) -> dict | None:
+    if epi is None:
+        return None
+    return {"bias": epi.bias, "act": epi.act, "slope": epi.slope}
+
+
+def _epi_from_json(d: dict | None) -> Epilogue | None:
+    if d is None:
+        return None
+    return Epilogue(bias=d["bias"], act=d["act"], slope=d.get("slope", 0.2))
+
+
+def _layer_to_json(lp: LayerPlan) -> dict:
+    d = {f: getattr(lp, f) for f in _LAYER_FIELDS}
+    d["epilogue"] = _epi_to_json(lp.epilogue)
+    return d
+
+
+def _layer_from_json(d: dict) -> LayerPlan:
+    kw = {k: v for k, v in d.items() if k in _LAYER_FIELDS}
+    kw["epilogue"] = _epi_from_json(d.get("epilogue"))
+    kw.setdefault("source", "registry")
+    return LayerPlan(**kw)
+
+
+def plan_to_dict(plan: TconvPlan) -> dict:
+    """One plan as a JSON-ready dict (entries in execution order)."""
+    entries = []
+    for e in plan.entries:
+        if isinstance(e, FusedPairPlan):
+            entries.append({
+                "kind": "pair",
+                "first": _layer_to_json(e.first),
+                "second": _layer_to_json(e.second),
+                "tile_ci": e.tile_ci,
+                "tile_mid": e.tile_mid,
+                "tile_co": e.tile_co,
+                "source": e.source,
+            })
+        else:
+            entries.append({"kind": "layer", **_layer_to_json(e)})
+    return {"name": plan.name, "entries": entries}
+
+
+def plan_from_dict(d: dict) -> TconvPlan:
+    """Inverse of :func:`plan_to_dict` — rebuilds the exact plan objects."""
+    entries: list = []
+    for e in d["entries"]:
+        if e.get("kind") == "pair":
+            entries.append(FusedPairPlan(
+                first=_layer_from_json(e["first"]),
+                second=_layer_from_json(e["second"]),
+                tile_ci=e.get("tile_ci"),
+                tile_mid=e.get("tile_mid"),
+                tile_co=e.get("tile_co"),
+                source=e.get("source", "registry"),
+            ))
+        else:
+            entries.append(_layer_from_json(e))
+    return TconvPlan(name=d["name"], layers=tuple(entries))
+
+
+def save_plan_registry(plans: dict, path) -> None:
+    """Persist ``{key: TconvPlan}`` to ``path`` atomically."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    blob = {
+        "version": REGISTRY_VERSION,
+        "plans": {k: plan_to_dict(p) for k, p in plans.items()},
+    }
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_plan_registry(path) -> dict:
+    """Load ``{key: TconvPlan}`` from ``path``.
+
+    Raises ``ValueError`` on a foreign version — a registry is a pinned
+    artifact, not a best-effort cache: silently dropping entries would turn
+    a warm start into a surprise cold compile.
+    """
+    blob = json.loads(Path(path).read_text())
+    if not isinstance(blob, dict) or blob.get("version") != REGISTRY_VERSION:
+        raise ValueError(
+            f"unsupported plan-registry version "
+            f"{blob.get('version') if isinstance(blob, dict) else None!r} "
+            f"(this build reads v{REGISTRY_VERSION})"
+        )
+    return {k: plan_from_dict(d) for k, d in blob.get("plans", {}).items()}

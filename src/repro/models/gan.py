@@ -85,7 +85,7 @@ def generator_epilogues(cfg: GANConfig) -> tuple:
 
 def generator_plan(cfg: GANConfig, batch: int, *, dtype=jnp.float32,
                    train: bool = False, method: str = "auto",
-                   epilogues=None):
+                   epilogues=None, fuse="auto"):
     """Compile the whole generator's :class:`~repro.kernels.plan.TconvPlan`
     once (autotune-cache winners + cold-cache napkin rule). Thread the
     result through ``generator_apply(plan=...)`` / the train step; retuning
@@ -95,13 +95,19 @@ def generator_plan(cfg: GANConfig, batch: int, *, dtype=jnp.float32,
     (:func:`generator_epilogues`) by default, so the compiled generator
     executes whole ``act(tconv + b)`` layers — pass
     ``epilogues=(None,) * len(cfg.layers)`` to compile a post-op-style
-    plan instead."""
+    plan instead.
+
+    ``fuse`` controls the layer-pair megafusion pass
+    (:func:`~repro.kernels.plan.fuse_pairs`): ``"auto"`` (default) fuses
+    eligible adjacent pairs per the autotuner's ``pair`` race, ``"force"``
+    fuses every legal pair, ``"off"`` keeps the stack per-layer.
+    Train-mode plans always stay unfused."""
     from repro.kernels.plan import compile_plan
 
     if epilogues is None:
         epilogues = generator_epilogues(cfg)
     return compile_plan(cfg, batch, dtype, train=train, method=method,
-                        epilogues=epilogues)
+                        epilogues=epilogues, fuse=fuse)
 
 
 def generator_init(key, cfg: GANConfig):
@@ -142,6 +148,12 @@ def generator_apply(params, cfg: GANConfig, z, *, method: str = "auto",
     every transpose conv is touched exactly once per layer, forward and
     backward. Plans compiled without epilogues keep working (their layers
     fall back to post-ops inside :func:`~repro.models.layers.tconv_apply`).
+
+    Plans whose fusion pass replaced adjacent layers with a
+    :class:`~repro.kernels.plan.FusedPairPlan` dispatch both layers as ONE
+    pair launch (:func:`~repro.kernels.plan.execute_pair`) — the interface
+    activation stays in VMEM — transparently: parameters, shapes, and
+    outputs are identical to the per-layer walk.
     """
     if plan is not None and len(plan) != len(cfg.layers):
         raise ValueError(
@@ -151,12 +163,31 @@ def generator_apply(params, cfg: GANConfig, z, *, method: str = "auto",
     x = (z @ params["proj"]["w"]).reshape(z.shape[0], h0, h0, c0)
     x = jax.nn.relu(x)
     n = len(cfg.layers)
-    for i in range(n):
-        x = tconv_apply(
-            params[f"tconv{i}"], x, cfg.padding, method=method, train=train,
-            plan=plan[i] if plan is not None else None,
-            act=generator_act(cfg, i),
-        )
+    if plan is None:
+        for i in range(n):
+            x = tconv_apply(
+                params[f"tconv{i}"], x, cfg.padding, method=method,
+                train=train, plan=None, act=generator_act(cfg, i),
+            )
+        return x
+    from repro.kernels import plan as planlib
+
+    i = 0
+    for entry in plan.entries:
+        if isinstance(entry, planlib.FusedPairPlan):
+            x = planlib.execute_pair(
+                entry, x,
+                params[f"tconv{i}"]["w"], params[f"tconv{i + 1}"]["w"],
+                bias1=params[f"tconv{i}"].get("b"),
+                bias2=params[f"tconv{i + 1}"].get("b"),
+            )
+            i += 2
+        else:
+            x = tconv_apply(
+                params[f"tconv{i}"], x, cfg.padding, method=method,
+                train=train, plan=entry, act=generator_act(cfg, i),
+            )
+            i += 1
     return x
 
 
@@ -181,7 +212,8 @@ def generator_flops(cfg: GANConfig, *, method: str,
 
 
 def generator_memory_savings(cfg: GANConfig, *,
-                             include_epilogue: bool = False) -> int:
+                             include_epilogue: bool = False,
+                             plan=None) -> int:
     """Bytes of avoidable traffic the unified method eliminates (Table 4).
 
     The paper's Table 4 counts the entire padded upsampled buffer
@@ -194,7 +226,14 @@ def generator_memory_savings(cfg: GANConfig, *,
     twice per layer (2 extra reads + 2 extra writes = 4·M²·Cout·4 bytes);
     the in-kernel epilogue stores the finished map once. Defaults to False
     — the bare figure is the paper's Table-4 number (the EB-GAN ~35 MB
-    golden)."""
+    golden).
+
+    ``plan=`` (a compiled, possibly pair-fused
+    :class:`~repro.kernels.plan.TconvPlan`) additionally counts the
+    inter-layer interface planes the megafusion pass keeps VMEM-resident:
+    each :class:`~repro.kernels.plan.FusedPairPlan` eliminates the fp32
+    interface write + read-back (2·M₁²·C₁·4 bytes per sample) the
+    back-to-back launches pay."""
     total = sum(
         memory_savings_bytes(hw, cin, 4, cfg.padding, mode="buffer")
         for hw, cin, _ in cfg.layers
@@ -203,6 +242,14 @@ def generator_memory_savings(cfg: GANConfig, *,
         for hw, _, cout in cfg.layers:
             m = output_size(hw, cfg.kernel, cfg.padding)
             total += 4 * m * m * cout * 4
+    if plan is not None:
+        from repro.kernels.plan import FusedPairPlan
+
+        for entry in plan.entries:
+            if isinstance(entry, FusedPairPlan):
+                lp1 = entry.first
+                m1 = output_size(lp1.n_in, lp1.n_k, lp1.padding)
+                total += 2 * m1 * m1 * lp1.cout * 4
     return total
 
 

@@ -99,10 +99,12 @@ class GanEngine:
     """
 
     def __init__(self, policy: BucketPolicy | None = None, *,
-                 dtype="float32", train: bool = False, clock=time.monotonic):
+                 dtype="float32", train: bool = False, fuse="auto",
+                 clock=time.monotonic):
         self.policy = policy or BucketPolicy()
         self.dtype = str(jnp.dtype(dtype))
         self.train = train
+        self.fuse = fuse   # layer-pair megafusion: "auto" | "force" | "off"
         self.clock = clock
         self.metrics = ServeMetrics()
         self.registry: dict[str, _ModelSlot] = {}
@@ -121,18 +123,50 @@ class GanEngine:
         self.registry[name] = _ModelSlot(cfg=cfg, params=params)
         return name
 
-    def warmup(self) -> None:
+    def warmup(self, registry_path=None) -> None:
         """Compile every (model, bucket) executable up front: plans via
         :func:`~repro.kernels.plan.compile_plan_buckets`, then one traced+
         compiled jit call each on zero latents. After this returns, the
         metrics recompile counter is frozen at its warmup value
-        (:attr:`warmup_recompiles`) — steady-state serving adds zero."""
+        (:attr:`warmup_recompiles`) — steady-state serving adds zero.
+
+        ``registry_path`` is the warm start
+        (:mod:`repro.kernels.plan_registry`, written by :meth:`save_plans`):
+        every ``"{model}:{bucket}"`` plan found in the file is adopted
+        verbatim — no per-process autotune-cache consult, no fusion-pass
+        re-resolution — and only (model, bucket) combinations the registry
+        lacks compile the normal way."""
+        if registry_path is not None:
+            from repro.kernels.plan_registry import load_plan_registry
+
+            reg = load_plan_registry(registry_path)
+            for name, slot in self.registry.items():
+                for bucket in self.policy.buckets:
+                    plan = reg.get(f"{name}:{bucket}")
+                    if plan is not None:
+                        slot.plans[bucket] = plan
         for name, slot in self.registry.items():
             for bucket in self.policy.buckets:
                 fn = self._executable(name, bucket)
                 z0 = jnp.zeros((bucket, slot.cfg.z_dim), self.dtype)
                 jax.block_until_ready(fn(slot.params, z0))
         self.warmup_recompiles = self.metrics.recompiles
+
+    def save_plans(self, path) -> None:
+        """Persist every compiled (model, bucket) plan to ``path`` as a plan
+        registry (:mod:`repro.kernels.plan_registry`) under
+        ``"{model}:{bucket}"`` keys — the artifact
+        :meth:`warmup(registry_path=...) <warmup>` warm-starts from."""
+        from repro.kernels.plan_registry import save_plan_registry
+
+        save_plan_registry(
+            {
+                f"{name}:{bucket}": plan
+                for name, slot in self.registry.items()
+                for bucket, plan in slot.plans.items()
+            },
+            path,
+        )
 
     def _executable(self, name: str, bucket: int):
         """The jitted whole-generator executable for one (model, bucket).
@@ -151,6 +185,7 @@ class GanEngine:
                 slot.plans.update(compile_plan_buckets(
                     slot.cfg, [bucket], self.dtype, train=self.train,
                     epilogues=generator_epilogues(slot.cfg),
+                    fuse=self.fuse,
                 ))
             plan = slot.plans[bucket]
             cfg, metrics = slot.cfg, self.metrics
@@ -346,7 +381,7 @@ class GanEngine:
 
 
 def sequential_executables(cfg, params, sizes, *, dtype="float32",
-                           train: bool = False) -> dict:
+                           train: bool = False, fuse="auto") -> dict:
     """Warmed plan-compiled per-size executables ``{n: fn(params, z)}`` —
     the **sequential per-request dispatch baseline** the serving benchmark
     and example compare the bucketed engine against. Each callable runs the
@@ -358,7 +393,8 @@ def sequential_executables(cfg, params, sizes, *, dtype="float32",
     from repro.models.gan import generator_apply, generator_epilogues
 
     plans = compile_plan_buckets(
-        cfg, sizes, dtype, train=train, epilogues=generator_epilogues(cfg)
+        cfg, sizes, dtype, train=train, epilogues=generator_epilogues(cfg),
+        fuse=fuse,
     )
     fns = {}
     for n, plan in plans.items():

@@ -30,13 +30,14 @@ def test_cache_roundtrip_persists_to_disk():
     assert entry is not None and entry["fwd"]["method"] == "unified_reshape"
     assert autotune.best_method(1, 8, 4, 16, 8, 2)["method"] == "unified_reshape"
     blob = json.loads(autotune.cache_path().read_text())
-    assert blob["version"] == 3 and key in blob["entries"]
+    assert blob["version"] == 4 and key in blob["entries"]
 
 
 def test_v1_cache_file_migrates_on_load():
     """Existing $REPRO_AUTOTUNE_CACHE files from the forward-only schema
     keep answering for the fwd direction; bwd/step stay cold; the next save
-    rewrites the file as v3 (keys gain the e:none epilogue component)."""
+    rewrites the file as the current schema (keys gain the e:none epilogue
+    component)."""
     v1key = "cpu|b1|n8|k4|ci16|co8|p2|float32"  # pre-epilogue key spelling
     autotune.cache_path().parent.mkdir(parents=True, exist_ok=True)
     autotune.cache_path().write_text(json.dumps({
@@ -46,20 +47,20 @@ def test_v1_cache_file_migrates_on_load():
     }))
     assert autotune.best_method(1, 8, 4, 16, 8, 2)["method"] == "unified_matmul"
     assert autotune.best_bwd(1, 8, 4, 16, 8, 2) is None
-    # recording any direction persists the migrated record as v3
+    # recording any direction persists the migrated record
     key = autotune.layer_key(1, 8, 4, 16, 8, 2)
     autotune.record(key, {"method": "lax", "time_s": 1e-4,
                           "source": "measured"}, direction="bwd")
     blob = json.loads(autotune.cache_path().read_text())
-    assert blob["version"] == 3
+    assert blob["version"] == 4
     assert blob["entries"][key]["fwd"]["method"] == "unified_matmul"
     assert blob["entries"][key]["bwd"]["method"] == "lax"
 
 
-def test_v2_cache_file_migrates_to_v3_keeping_tiles():
+def test_v2_cache_file_migrates_forward_keeping_tiles():
     """v2 caches (per-direction records, no epilogue key component) load,
     answer for the e:none signature WITH their tuned tiles intact, and are
-    rewritten as v3 on the next save."""
+    rewritten as the current schema on the next save."""
     v2key = "cpu|b1|n8|k4|ci16|co8|p2|float32"
     autotune.cache_path().parent.mkdir(parents=True, exist_ok=True)
     autotune.cache_path().write_text(json.dumps({
@@ -76,11 +77,11 @@ def test_v2_cache_file_migrates_to_v3_keeping_tiles():
     assert (hit["tile_h"], hit["tile_w"]) == (16, 128)
     bwd = autotune.best_bwd(1, 8, 4, 16, 8, 2)
     assert bwd["method"] == "pallas" and bwd["tile_h"] == 8
-    # any write re-saves the migrated view as v3 without losing the tiles
+    # any write re-saves the migrated view without losing the tiles
     autotune.record(autotune.layer_key(9, 9, 9, 9, 9, 9),
                     {"method": "conventional", "time_s": 1.0, "source": "t"})
     blob = json.loads(autotune.cache_path().read_text())
-    assert blob["version"] == 3
+    assert blob["version"] == 4
     migrated = blob["entries"][autotune.layer_key(1, 8, 4, 16, 8, 2)]
     assert migrated["fwd"]["tile_h"] == 16
     assert migrated["bwd"]["tile_w"] == 64
@@ -254,7 +255,7 @@ def test_foreign_cache_version_is_preserved_on_save():
     autotune.record(key, {"method": "unified_reshape", "time_s": 1e-4,
                           "source": "measured"})
     blob = json.loads(autotune.cache_path().read_text())
-    assert blob["version"] == 3
+    assert blob["version"] == 4
     bak = autotune.cache_path().with_name(
         autotune.cache_path().name + ".v99.bak"
     )
@@ -491,3 +492,149 @@ def test_bwd_roofline_pallas_beats_lax_on_gan_layers():
                 "lax", 1, hw, cfg.kernel, cin, cout, cfg.padding
             )
             assert pallas <= lax_s, (cfg.name, hw, cin, cout, pallas, lax_s)
+
+
+# ------------------------------------------------- pair direction (schema v4)
+
+def _mk_epis():
+    from repro.kernels.epilogue import Epilogue
+
+    return Epilogue(bias=True, act="relu"), Epilogue(bias=True, act="tanh")
+
+
+def test_pair_key_format_and_roundtrip():
+    e1, e2 = _mk_epis()
+    key = autotune.pair_key(1, 4, 4, 8, 6, 4, 2, epilogue1=e1, epilogue2=e2)
+    assert "|pair|" in key
+    assert key.endswith("|e1:b+relu|e2:b+tanh")
+    assert "ci8" in key and "mid6" in key and "co4" in key
+    autotune.record(key, {"method": "pallas_pair", "time_s": 1e-6,
+                          "source": "measured", "tile_ci": 8, "tile_mid": 6,
+                          "tile_co": 4}, direction="pair")
+    autotune._STATE.update(mtime=-1.0, entries={})  # force disk reload
+    rec = autotune.best_pair(1, 4, 4, 8, 6, 4, 2, epilogue1=e1, epilogue2=e2)
+    assert rec["method"] == "pallas_pair" and rec["tile_ci"] == 8
+    blob = json.loads(autotune.cache_path().read_text())
+    assert blob["version"] == 4 and key in blob["entries"]
+
+
+def test_prune_keeps_pair_keys():
+    e1, e2 = _mk_epis()
+    key = autotune.pair_key(1, 4, 4, 8, 6, 4, 2, epilogue1=e1, epilogue2=e2)
+    autotune.record(key, {"method": "back_to_back", "time_s": 1e-6,
+                          "source": "proxy"}, direction="pair")
+    assert autotune.prune_cache() == []
+    assert autotune.lookup(key) is not None
+
+
+def test_v3_cache_loads_as_passthrough_and_rewrites_v4():
+    """v3 -> v4 is purely additive: layer entries are untouched, the file is
+    simply rewritten as v4 on the next save."""
+    key = autotune.layer_key(1, 8, 4, 16, 8, 2)
+    autotune.cache_path().parent.mkdir(parents=True, exist_ok=True)
+    autotune.cache_path().write_text(json.dumps({
+        "version": 3,
+        "entries": {key: {"fwd": {"method": "unified_reshape",
+                                  "time_s": 1e-4, "source": "measured"}}},
+    }))
+    assert autotune.best_method(1, 8, 4, 16, 8, 2)["method"] == \
+        "unified_reshape"
+    autotune.record(autotune.layer_key(9, 9, 9, 9, 9, 9),
+                    {"method": "conventional", "time_s": 1.0, "source": "t"})
+    blob = json.loads(autotune.cache_path().read_text())
+    assert blob["version"] == 4
+    assert blob["entries"][key]["fwd"]["method"] == "unified_reshape"
+
+
+def test_alien_pair_winner_set_aside():
+    """A pair record whose winner this build doesn't know (a newer build's
+    kernel) answers as a cache miss and survives re-save verbatim — the
+    same forward-compat contract as layer records."""
+    e1, e2 = _mk_epis()
+    key = autotune.pair_key(1, 4, 4, 8, 6, 4, 2, epilogue1=e1, epilogue2=e2)
+    alien = {"pair": {"method": "pallas_trio", "time_s": 1e-9,
+                      "source": "measured"}}
+    autotune.cache_path().parent.mkdir(parents=True, exist_ok=True)
+    autotune.cache_path().write_text(json.dumps(
+        {"version": 4, "entries": {key: alien}}
+    ))
+    assert autotune.lookup(key) is None
+    assert autotune.best_pair(1, 4, 4, 8, 6, 4, 2,
+                              epilogue1=e1, epilogue2=e2) is None
+    autotune.record(autotune.layer_key(9, 9, 9, 9, 9, 9),
+                    {"method": "conventional", "time_s": 1.0, "source": "t"})
+    blob = json.loads(autotune.cache_path().read_text())
+    assert blob["entries"][key] == alien
+
+
+def test_tune_pair_cpu_records_back_to_back_proxy():
+    """On CPU neither pair candidate is wall-clockable (both are Pallas
+    kernels), so tune_pair records the back_to_back winner from the
+    roofline proxies — interpret-mode fusion must never win dispatch."""
+    e1, e2 = _mk_epis()
+    rec = autotune.tune_pair(
+        1, 4, 4, 8, 6, 4, 2, epilogue1=e1, epilogue2=e2
+    )["pair"]
+    assert rec["method"] == "back_to_back"
+    assert rec["source"] == "proxy"
+    assert set(rec["proxy"]) == {"pallas_pair", "back_to_back"}
+    hit = autotune.best_pair(1, 4, 4, 8, 6, 4, 2, epilogue1=e1, epilogue2=e2)
+    assert hit["method"] == "back_to_back"
+
+
+def test_pair_roofline_geomean_beats_back_to_back_on_zoo():
+    """The analytic models must prefer the fused pair kernel in pooled
+    geomean across the zoo's eligible pairs — the bench's
+    layer_pair_fusion >= 1.2x gate, pinned here shape by shape."""
+    import math
+
+    from repro.kernels.transpose_conv2d_pair import (
+        PAIR_VMEM_BUDGET_BYTES, pair_vmem_bytes,
+    )
+    from repro.models.gan import GAN_ZOO, generator_epilogues
+
+    ratios = []
+    for cfg in GAN_ZOO.values():
+        epis = generator_epilogues(cfg)
+        i = 0
+        while i + 1 < len(cfg.layers):
+            (hw, c0, c1), (_, _, c2) = cfg.layers[i], cfg.layers[i + 1]
+            if pair_vmem_bytes(hw, cfg.kernel, c0, c1, c2,
+                               cfg.padding) > PAIR_VMEM_BUDGET_BYTES:
+                i += 1
+                continue
+            pair_s, _ = autotune.best_pair_proxy(
+                8, hw, cfg.kernel, c0, c1, c2, cfg.padding,
+                epilogue1=epis[i], epilogue2=epis[i + 1],
+            )
+            b2b_s = autotune.back_to_back_proxy(
+                8, hw, cfg.kernel, c0, c1, c2, cfg.padding,
+                epilogue1=epis[i], epilogue2=epis[i + 1],
+            )
+            ratios.append(b2b_s / pair_s)
+            i += 2
+    assert len(ratios) == 8  # greedy pairing over the zoo, EB-GAN tail out
+    geomean = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+    assert geomean >= 1.2, (geomean, ratios)
+
+
+def test_cli_methods_accepts_pair_candidates(capsys):
+    with pytest.raises(SystemExit) as exc:
+        autotune.main(["--pair", "1", "4", "4", "8", "6", "4", "2",
+                       "--methods", "pallas_pair,back_to_warp"])
+    assert exc.value.code == 2
+    err = capsys.readouterr().err
+    assert "back_to_warp" in err
+    for valid in autotune.PAIR_CANDIDATES:
+        assert valid in err
+
+
+def test_cli_pair_smoke(capsys):
+    autotune.main(["--pair", "1", "4", "4", "8", "6", "4", "2",
+                   "--repeats", "1"])
+    out = capsys.readouterr().out
+    assert "pair=" in out
+    e1, e2 = _mk_epis()
+    assert autotune.best_pair(
+        1, 4, 4, 8, 6, 4, 2, epilogue1=e1, epilogue2=e2
+    ) is not None

@@ -1,0 +1,415 @@
+"""Layer-pair megafusion: the fused pair kernel's numerics, the VMEM
+estimator + legality screen across the GAN zoo, the plan pass's fuse/no-fuse
+decisions, dispatch through the generator, gradients, and the proof that the
+inter-layer interface never touches HBM (scratch spy)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune
+from repro.kernels import epilogue as epilib
+from repro.kernels import ops, ref
+from repro.kernels import plan as planlib
+from repro.kernels import transpose_conv2d_pair as pairlib
+from repro.models import gan
+
+
+@pytest.fixture(autouse=True)
+def tmp_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+    autotune.clear_cache(memory_only=True)
+    yield
+    autotune.clear_cache(memory_only=True)
+
+
+def _tiny(cfg, scale=16):
+    layers = tuple(
+        (hw, max(cin // scale, 2), max(cout // scale, 2))
+        for hw, cin, cout in cfg.layers
+    )
+    return dataclasses.replace(cfg, layers=layers)
+
+
+def _ref_pair(x, k1, k2, pad, e1=None, b1=None, e2=None, b2=None):
+    y1 = ref.conventional_ref(x, k1, pad)
+    if e1 is not None:
+        y1 = e1.apply(y1, b1)
+    y2 = ref.conventional_ref(y1, k2, pad)
+    if e2 is not None:
+        y2 = e2.apply(y2, b2)
+    return y2
+
+
+def _pair_data(key, n_in, n_k, c0, c1, c2, batch=2, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.key(key), 5)
+    x = jax.random.normal(ks[0], (batch, n_in, n_in, c0), dtype)
+    k1 = jax.random.normal(ks[1], (n_k, n_k, c0, c1), dtype) * 0.1
+    k2 = jax.random.normal(ks[2], (n_k, n_k, c1, c2), dtype) * 0.1
+    b1 = jax.random.normal(ks[3], (c1,), dtype)
+    b2 = jax.random.normal(ks[4], (c2,), dtype)
+    return x, k1, k2, b1, b2
+
+
+# --------------------------------------------------------- kernel numerics
+
+@pytest.mark.parametrize(
+    "n_in,n_k,pad,c0,c1,c2,tiles",
+    [
+        (4, 4, 2, 8, 6, 4, {}),
+        (4, 4, 2, 8, 6, 4, dict(cin_tile=4, mid_tile=3, cout_tile=2)),
+        (5, 3, 1, 3, 5, 2, {}),          # odd extent, odd kernel
+        (7, 5, 2, 2, 3, 3, {}),          # odd extent + odd kernel
+        (6, 4, 1, 2, 2, 2, {}),          # padding < kernel//2
+    ],
+)
+def test_pair_kernel_matches_ref_composition(n_in, n_k, pad, c0, c1, c2,
+                                             tiles):
+    e1 = epilib.make(True, "leaky_relu")
+    e2 = epilib.make(True, "tanh")
+    x, k1, k2, b1, b2 = _pair_data(0, n_in, n_k, c0, c1, c2)
+    got = pairlib.transpose_conv2d_pair_pallas(
+        x, k1, k2, pad, epilogue1=e1, bias1=b1, epilogue2=e2, bias2=b2,
+        **tiles,
+    )
+    want = _ref_pair(x, k1, k2, pad, e1, b1, e2, b2)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_pair_kernel_no_epilogue_matches_ref():
+    x, k1, k2, _, _ = _pair_data(1, 4, 4, 4, 4, 3, batch=1)
+    got = pairlib.transpose_conv2d_pair_pallas(x, k1, k2, 2)
+    want = _ref_pair(x, k1, k2, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pair_kernel_bitwise_equals_back_to_back_fp32():
+    # fused pair vs the two single-layer launches it replaces: identical
+    # phase decomposition + fp32 interface -> exact same float structure
+    e1 = epilib.make(True, "relu")
+    e2 = epilib.make(True, "tanh")
+    x, k1, k2, b1, b2 = _pair_data(2, 4, 4, 8, 6, 4)
+    y1 = ops.transpose_conv2d_pallas(x, k1, 2, epilogue=e1, bias=b1)
+    y2 = ops.transpose_conv2d_pallas(y1, k2, 2, epilogue=e2, bias=b2)
+    got = pairlib.transpose_conv2d_pair_pallas(
+        x, k1, k2, 2, epilogue1=e1, bias1=b1, epilogue2=e2, bias2=b2,
+    )
+    assert jnp.array_equal(got, y2)
+
+
+def test_pair_kernel_matches_back_to_back_bf16():
+    e1 = epilib.make(True, "relu")
+    e2 = epilib.make(True, "tanh")
+    x, k1, k2, b1, b2 = _pair_data(3, 4, 4, 8, 6, 4, dtype=jnp.bfloat16)
+    y1 = ops.transpose_conv2d_pallas(x, k1, 2, epilogue=e1, bias=b1)
+    y2 = ops.transpose_conv2d_pallas(y1, k2, 2, epilogue=e2, bias=b2)
+    got = pairlib.transpose_conv2d_pair_pallas(
+        x, k1, k2, 2, epilogue1=e1, bias1=b1, epilogue2=e2, bias2=b2,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(y2, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_pair_kernel_rejects_non_dividing_channel_tile():
+    x, k1, k2, _, _ = _pair_data(4, 4, 4, 8, 6, 4)
+    with pytest.raises(ValueError):
+        pairlib.transpose_conv2d_pair_pallas(x, k1, k2, 2, cin_tile=5)
+
+
+# ------------------------------------------- interface never touches HBM
+
+def test_interface_lives_in_vmem_scratch_not_hbm():
+    # spy on the single pallas_call: the ONLY output is the final layer's
+    # map; the interface exists solely as a VMEM scratch slab
+    captured = {}
+    orig = pairlib.pl.pallas_call
+
+    def spy(kernel_fn, **kw):
+        captured.update(kw)
+        return orig(kernel_fn, **kw)
+
+    x, k1, k2, b1, b2 = _pair_data(5, 4, 4, 8, 6, 4)
+    e1 = epilib.make(True, "relu")
+    e2 = epilib.make(True, "tanh")
+    # the kernel entry point is jitted: drop any trace an earlier test
+    # cached for these shapes, or pallas_call never runs again
+    jax.clear_caches()
+    pairlib.pl.pallas_call = spy
+    try:
+        pairlib.transpose_conv2d_pair_pallas(
+            x, k1, k2, 2, epilogue1=e1, bias1=b1, epilogue2=e2, bias2=b2,
+        )
+    finally:
+        pairlib.pl.pallas_call = orig
+
+    scratch = captured["scratch_shapes"]
+    assert len(scratch) == 1
+    geo = pairlib.pair_geometry(4, 4, 2)
+    tmid = pairlib.default_pair_tiles(8, 6, 4)[1]
+    assert tuple(scratch[0].shape) == (2 * geo["hp1"], 2 * geo["hp1"], tmid)
+    assert "vmem" in str(getattr(scratch[0], "memory_space",
+                                 scratch[0])).lower()
+    # single out_shape = the consumer's output only; no interface output
+    out = captured["out_shape"]
+    assert not isinstance(out, (tuple, list))
+    assert out.shape[-1] == 4  # c2, the FINAL channel count
+
+
+# ------------------------------------------------ VMEM estimator + legality
+
+def test_pair_vmem_bytes_deterministic_and_monotone():
+    a = pairlib.pair_vmem_bytes(4, 4, 256, 128, 64, 2)
+    assert a == pairlib.pair_vmem_bytes(4, 4, 256, 128, 64, 2)
+    assert pairlib.pair_vmem_bytes(8, 4, 256, 128, 64, 2) > a
+    # channel growth past the tile snap leaves the per-tile footprint
+    # unchanged (the estimator sizes ONE grid step, not the whole layer)
+    assert pairlib.pair_vmem_bytes(4, 4, 512, 128, 64, 2) == a
+    # ...but bigger explicit tiles do grow it
+    assert pairlib.pair_vmem_bytes(
+        4, 4, 512, 128, 64, 2, tiles=(512, 128, 64)
+    ) > a
+    # bf16 input plane + kernels shrink the footprint
+    assert pairlib.pair_vmem_bytes(4, 4, 256, 128, 64, 2, dtype_bytes=2) < a
+
+
+def test_zoo_fusion_classification_full_size():
+    # legality screen over the FULL-size zoo (plan compile only, nothing
+    # executes): every head pair fits VMEM; EB-GAN's 64x64x64->128 tail
+    # pair blows the budget and must stay per-layer
+    expected = {
+        "dcgan": [True, True],
+        "artgan": [True, True],
+        "gpgan": [True, True],
+        "ebgan": [True, True, False],
+    }
+    for name, want in expected.items():
+        cfg = gan.GAN_ZOO[name]
+        plan = planlib.compile_plan(
+            cfg, 1, epilogues=gan.generator_epilogues(cfg), fuse="force"
+        )
+        got = [isinstance(e, planlib.FusedPairPlan) for e in plan.entries]
+        fused = [g for g in got if g]
+        # entries: one flag per FusedPairPlan, two LayerPlans per no-fuse
+        n_layers = len(cfg.layers)
+        assert len(fused) == sum(want), (name, got)
+        assert len(plan) == n_layers
+        # the no-fuse tail (if any) is at the END of the stack
+        if not all(want):
+            assert not any(
+                isinstance(e, planlib.FusedPairPlan)
+                for e in plan.entries[-2:]
+            ), name
+
+
+def test_pair_legal_reasons():
+    epi = epilib.make(True, "relu")
+    lp1 = planlib.plan_layer(2, 4, 4, 8, 6, 2, epilogue=epi)
+    lp2 = planlib.plan_layer(2, 8, 4, 6, 4, 2, epilogue=epi)
+    ok, why = planlib.pair_legal(lp1, lp2)
+    assert ok, why
+
+    # no bias epilogue on the interface
+    lp1_nobias = planlib.plan_layer(2, 4, 4, 8, 6, 2)
+    ok, why = planlib.pair_legal(lp1_nobias, lp2)
+    assert not ok and "bias" in why
+
+    # channel chain broken
+    lp2_badchain = planlib.plan_layer(2, 8, 4, 5, 4, 2, epilogue=epi)
+    ok, why = planlib.pair_legal(lp1, lp2_badchain)
+    assert not ok and "channel chain" in why
+
+    # not adjacent (consumer extent != producer output extent)
+    lp2_far = planlib.plan_layer(2, 16, 4, 6, 4, 2, epilogue=epi)
+    ok, why = planlib.pair_legal(lp1, lp2_far)
+    assert not ok and "adjacent" in why
+
+    # non-fp32 consumer: the interface contract is the fp32 accumulator
+    lp2_bf16 = planlib.plan_layer(2, 8, 4, 6, 4, 2, dtype="bfloat16",
+                                  epilogue=epi)
+    ok, why = planlib.pair_legal(lp1, lp2_bf16)
+    assert not ok and "float32" in why
+
+    # VMEM budget: EB-GAN's full-size tail pair
+    big1 = planlib.plan_layer(1, 64, 4, 128, 64, 2, epilogue=epi)
+    big2 = planlib.plan_layer(1, 128, 4, 64, 64, 2, epilogue=epi)
+    ok, why = planlib.pair_legal(big1, big2)
+    assert not ok and "VMEM" in why
+
+
+# ------------------------------------------------------- plan pass behavior
+
+def test_fuse_auto_cold_cpu_stays_unfused():
+    cfg = _tiny(gan.DCGAN)
+    plan = planlib.compile_plan(
+        cfg, 2, epilogues=gan.generator_epilogues(cfg), fuse="auto"
+    )
+    assert jax.default_backend() == "cpu"
+    assert not any(
+        isinstance(e, planlib.FusedPairPlan) for e in plan.entries
+    )
+
+
+def test_tuned_pallas_pair_record_fuses_with_tiles():
+    cfg = _tiny(gan.DCGAN)
+    unfused = planlib.compile_plan(
+        cfg, 2, epilogues=gan.generator_epilogues(cfg), fuse="off"
+    )
+    lp0, lp1 = unfused.entries[0], unfused.entries[1]
+    key = autotune.pair_key(
+        2, lp0.n_in, lp0.n_k, lp0.cin, lp0.cout, lp1.cout, lp0.padding,
+        epilogue1=lp0.epilogue, epilogue2=lp1.epilogue,
+    )
+    autotune.record(key, {
+        "method": "pallas_pair", "time_s": 1e-5, "source": "measured",
+        "tile_ci": lp0.cin, "tile_mid": lp0.cout, "tile_co": lp1.cout,
+    }, direction="pair", persist=False)
+    fused = planlib.fuse_pairs(unfused, fuse="auto")
+    fp = fused.entries[0]
+    assert isinstance(fp, planlib.FusedPairPlan)
+    assert fp.source == "tuned"
+    assert (fp.tile_ci, fp.tile_mid, fp.tile_co) == (
+        lp0.cin, lp0.cout, lp1.cout
+    )
+
+
+def test_back_to_back_winner_stays_unfused():
+    cfg = _tiny(gan.DCGAN)
+    unfused = planlib.compile_plan(
+        cfg, 2, epilogues=gan.generator_epilogues(cfg), fuse="off"
+    )
+    for lp0, lp1 in zip(unfused.entries, unfused.entries[1:]):
+        key = autotune.pair_key(
+            2, lp0.n_in, lp0.n_k, lp0.cin, lp0.cout, lp1.cout, lp0.padding,
+            epilogue1=lp0.epilogue, epilogue2=lp1.epilogue,
+        )
+        autotune.record(key, {"method": "back_to_back", "time_s": 1e-5,
+                              "source": "measured"},
+                        direction="pair", persist=False)
+    fused = planlib.fuse_pairs(unfused, fuse="auto")
+    assert not any(
+        isinstance(e, planlib.FusedPairPlan) for e in fused.entries
+    )
+
+
+def test_train_plans_never_fuse():
+    cfg = _tiny(gan.DCGAN)
+    plan = planlib.compile_plan(
+        cfg, 2, train=True, epilogues=gan.generator_epilogues(cfg),
+        fuse="force",
+    )
+    assert not any(
+        isinstance(e, planlib.FusedPairPlan) for e in plan.entries
+    )
+
+
+def test_fuse_pairs_idempotent():
+    cfg = _tiny(gan.DCGAN)
+    plan = planlib.compile_plan(
+        cfg, 2, epilogues=gan.generator_epilogues(cfg), fuse="force"
+    )
+    assert any(isinstance(e, planlib.FusedPairPlan) for e in plan.entries)
+    again = planlib.fuse_pairs(plan, fuse="force")
+    assert again == plan
+    # and fusing with fuse="off" round-trips back to per-layer
+    flat = planlib.fuse_pairs(plan, fuse="off")
+    assert flat == plan  # "off" is a no-op pass-through
+    assert tuple(plan) == tuple(again)
+
+
+def test_execute_layer_rejects_fused_pair_plan():
+    cfg = _tiny(gan.DCGAN)
+    plan = planlib.compile_plan(
+        cfg, 2, epilogues=gan.generator_epilogues(cfg), fuse="force"
+    )
+    fp = plan.entries[0]
+    assert isinstance(fp, planlib.FusedPairPlan)
+    x = jnp.ones((2, fp.first.n_in, fp.first.n_in, fp.first.cin))
+    k = jnp.ones((4, 4, fp.first.cin, fp.first.cout))
+    with pytest.raises(TypeError, match="execute_pair"):
+        planlib.execute_layer(fp, x, k)
+
+
+# ------------------------------------------------- end-to-end + gradients
+
+@pytest.mark.parametrize("name", sorted(gan.GAN_ZOO))
+def test_fused_generator_matches_unfused_zoo(name):
+    cfg = _tiny(gan.GAN_ZOO[name], scale=32)
+    params = gan.generator_init(jax.random.key(0), cfg)
+    z = jax.random.normal(jax.random.key(1), (2, cfg.z_dim))
+    plan_u = gan.generator_plan(cfg, 2, fuse="off")
+    plan_f = gan.generator_plan(cfg, 2, fuse="force")
+    assert any(
+        isinstance(e, planlib.FusedPairPlan) for e in plan_f.entries
+    ), name
+    out_u = gan.generator_apply(params, cfg, z, plan=plan_u)
+    out_f = gan.generator_apply(params, cfg, z, plan=plan_f)
+    assert out_f.shape == out_u.shape
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_u),
+                               rtol=0, atol=1e-6)
+
+
+def test_fused_generator_matches_unfused_bf16():
+    cfg = dataclasses.replace(_tiny(gan.DCGAN, scale=32))
+    params = gan.generator_init(jax.random.key(0), cfg)
+    params = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.bfloat16), params
+    )
+    z = jax.random.normal(jax.random.key(1), (2, cfg.z_dim), jnp.bfloat16)
+    plan_u = gan.generator_plan(cfg, 2, dtype=jnp.bfloat16, fuse="off")
+    plan_f = gan.generator_plan(cfg, 2, dtype=jnp.bfloat16, fuse="force")
+    out_u = gan.generator_apply(params, cfg, z, plan=plan_u)
+    out_f = gan.generator_apply(params, cfg, z, plan=plan_f)
+    np.testing.assert_allclose(
+        np.asarray(out_f, np.float32), np.asarray(out_u, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_pair_gradients_match_per_layer_backward():
+    # the pair VJP recomputes the interface and chains the per-layer tuned
+    # backwards -> gradients are the back-to-back machinery, bit-for-bit
+    epi1 = epilib.make(True, "leaky_relu")
+    epi2 = epilib.make(True, "tanh")
+    lp1 = planlib.plan_layer(2, 4, 4, 8, 6, 2, epilogue=epi1)
+    lp2 = planlib.plan_layer(2, 8, 4, 6, 4, 2, epilogue=epi2)
+    fp = planlib.plan_pair(lp1, lp2, fuse="force")
+    assert fp is not None
+    x, k1, k2, b1, b2 = _pair_data(6, 4, 4, 8, 6, 4)
+
+    def loss_pair(x, k1, k2, b1, b2):
+        y = planlib.execute_pair(fp, x, k1, k2, bias1=b1, bias2=b2)
+        return jnp.sum(y * y)
+
+    def loss_layers(x, k1, k2, b1, b2):
+        y1 = planlib.execute_layer(lp1, x, k1, bias=b1)
+        y = planlib.execute_layer(lp2, y1, k2, bias=b2)
+        return jnp.sum(y * y)
+
+    gp = jax.grad(loss_pair, argnums=(0, 1, 2, 3, 4))(x, k1, k2, b1, b2)
+    gl = jax.grad(loss_layers, argnums=(0, 1, 2, 3, 4))(x, k1, k2, b1, b2)
+    for a, b in zip(gp, gl):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_generator_memory_savings_counts_interface_planes():
+    cfg = _tiny(gan.DCGAN)
+    plan = planlib.compile_plan(
+        cfg, 1, epilogues=gan.generator_epilogues(cfg), fuse="force"
+    )
+    base = gan.generator_memory_savings(cfg)
+    with_plan = gan.generator_memory_savings(cfg, plan=plan)
+    expect_extra = 0
+    for e in plan.entries:
+        if isinstance(e, planlib.FusedPairPlan):
+            m1 = 2 * e.first.n_in - e.first.n_k + 2 * e.first.padding
+            expect_extra += 2 * m1 * m1 * e.first.cout * 4
+    assert expect_extra > 0
+    assert with_plan - base == expect_extra

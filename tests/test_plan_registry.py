@@ -1,0 +1,125 @@
+"""Plan-registry serialization: exact round-trips (per-layer AND pair-fused
+plans), version pinning, and the GanEngine warm start that adopts registry
+plans without a single autotune-cache consult or fusion-pass re-run."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune
+from repro.kernels import plan as planlib
+from repro.kernels import plan_registry as reg
+from repro.models import gan
+from repro.serve import BucketPolicy, GanEngine
+
+
+@pytest.fixture(autouse=True)
+def tmp_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+    autotune.clear_cache(memory_only=True)
+    yield
+    autotune.clear_cache(memory_only=True)
+
+
+def _plans():
+    cfg = gan.reduced_config(gan.DCGAN)
+    epis = gan.generator_epilogues(cfg)
+    fused = planlib.compile_plan(cfg, 2, epilogues=epis, fuse="force")
+    unfused = planlib.compile_plan(cfg, 2, epilogues=epis, fuse="off")
+    assert any(isinstance(e, planlib.FusedPairPlan) for e in fused.entries)
+    return fused, unfused
+
+
+# ----------------------------------------------------------- round trips
+
+def test_plan_dict_round_trip_exact():
+    fused, unfused = _plans()
+    for p in (fused, unfused):
+        p2 = reg.plan_from_dict(json.loads(json.dumps(reg.plan_to_dict(p))))
+        assert p2 == p          # frozen dataclasses -> field-exact equality
+        assert tuple(p2) == tuple(p)
+
+
+def test_save_load_registry_round_trip(tmp_path):
+    fused, unfused = _plans()
+    path = tmp_path / "plans.json"
+    reg.save_plan_registry({"dcgan:2": fused, "dcgan-flat:2": unfused}, path)
+    loaded = reg.load_plan_registry(path)
+    assert set(loaded) == {"dcgan:2", "dcgan-flat:2"}
+    assert loaded["dcgan:2"] == fused
+    assert loaded["dcgan-flat:2"] == unfused
+
+
+def test_foreign_version_raises(tmp_path):
+    path = tmp_path / "plans.json"
+    path.write_text(json.dumps({"version": 99, "plans": {}}))
+    with pytest.raises(ValueError, match="version"):
+        reg.load_plan_registry(path)
+
+
+# ------------------------------------------------------ engine warm start
+
+def _engine(tiny, params):
+    eng = GanEngine(BucketPolicy(buckets=(1, 2), max_wait_s=0.01))
+    eng.register(tiny, params, name="dcgan")
+    return eng
+
+
+def test_engine_save_plans_then_warm_start(tmp_path, monkeypatch):
+    tiny = gan.reduced_config(gan.DCGAN)
+    params = gan.generator_init(jax.random.key(0), tiny)
+    path = tmp_path / "plans.json"
+
+    cold = _engine(tiny, params)
+    cold.warmup()
+    cold.save_plans(path)
+    blob = json.loads(path.read_text())
+    assert set(blob["plans"]) == {"dcgan:1", "dcgan:2"}
+
+    # the warm engine must never compile plans nor consult the autotune
+    # cache: every consult path is booby-trapped
+    def boom(*a, **kw):
+        raise AssertionError("warm start consulted the autotune/compile path")
+
+    monkeypatch.setattr(planlib, "compile_plan_buckets", boom)
+    monkeypatch.setattr(autotune, "best_entry", boom)
+    monkeypatch.setattr(autotune, "best_pair", boom)
+
+    warm = _engine(tiny, params)
+    warm.warmup(registry_path=path)
+    for bucket in (1, 2):
+        assert warm.registry["dcgan"].plans[bucket] == \
+            cold.registry["dcgan"].plans[bucket]
+
+    # adopted plans serve bitwise-identically to unbatched generator_apply
+    z = jax.random.normal(jax.random.key(1), (2, tiny.z_dim))
+    got = warm._executable("dcgan", 2)(params, z)
+    want = gan.generator_apply(
+        params, tiny, z, plan=cold.registry["dcgan"].plans[2]
+    )
+    assert jnp.array_equal(got, want)
+
+
+def test_warm_start_with_partial_registry_compiles_the_rest(tmp_path):
+    tiny = gan.reduced_config(gan.DCGAN)
+    params = gan.generator_init(jax.random.key(0), tiny)
+    path = tmp_path / "plans.json"
+
+    cold = _engine(tiny, params)
+    cold.warmup()
+    # registry covering bucket 1 only
+    reg.save_plan_registry(
+        {"dcgan:1": cold.registry["dcgan"].plans[1]}, path
+    )
+    warm = _engine(tiny, params)
+    warm.warmup(registry_path=path)   # bucket 2 compiles the normal way
+    assert set(warm.registry["dcgan"].plans) == {1, 2}
+    assert warm.registry["dcgan"].plans[1] == cold.registry["dcgan"].plans[1]
+
+    z = jax.random.normal(jax.random.key(2), (2, tiny.z_dim))
+    got = warm._executable("dcgan", 2)(params, z)
+    ref = cold._executable("dcgan", 2)(params, z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=0, atol=0)
