@@ -9,7 +9,10 @@
 # (fused >= per-phase, pallas bwd >= lax bwd), then the serving benchmark
 # (serving_bench --quick --check), failing unless the bucketed engine beats
 # sequential per-request dispatch by the floor factor with zero steady-state
-# recompiles, then the training benchmark (training_bench --quick --check),
+# recompiles AND both serving chaos runs pass (kill-one and hang-one of two
+# replicas mid-trace: recovery on the survivor, request conservation,
+# bitwise-equal retried outputs, zero per-replica retraces), then the
+# training benchmark (training_bench --quick --check),
 # a crash-resume smoke that fails unless a mid-run kill relaunches from the
 # newest checkpoint onto a bit-exact loss trajectory. Full mode additionally
 # runs table4_gans, which merges its train rows into the same artifact (the

@@ -16,6 +16,20 @@ formation. Under ``--check`` the section gates two invariants:
 * zero steady-state recompiles (the engine's trace-time counter must not
   move after warmup across the whole timed run).
 
+The ``chaos`` subsection is the serving-resilience twin of the trainer's
+fault-injection smoke: the same trace runs through a two-replica
+:class:`~repro.serve.supervisor.ReplicaSupervisor` with a deterministic
+fault injected mid-trace — a **kill** run (one replica crashes and stays
+down) and a **hang** run (one dispatch stalls past its timeout). Under
+``--check`` each run gates the resilience contract:
+
+* every request completes on the surviving replica (requeue happened,
+  nothing hung, nothing lost: the conservation ledger balances);
+* retried outputs are bitwise-equal to unbatched ``generator_apply`` —
+  a rerouted batch is indistinguishable from a clean one;
+* per-replica steady-state recompiles stay zero under faults (a retried
+  bucket re-runs a warmed executable, never a fresh trace).
+
 Quick mode (CI) uses a reduced DCGAN and a short trace; full mode serves
 two zoo models through one engine at longer traces.
 """
@@ -114,12 +128,118 @@ def bench_serving(*, quick: bool) -> dict:
         "warmup_recompiles": engine.warmup_recompiles,
         "recompiles_steady": recompiles_steady,
         "latency_s": m.latency_percentiles(),
+        "conservation": engine.conservation(),
+        "per_model": m.summary()["per_model"],
     }
+
+
+def _chaos_run(fault: str, *, quick: bool) -> dict:
+    """One supervised two-replica run of the quick trace with a
+    deterministic fault injected mid-trace. ``fault`` is ``"kill"`` (r0
+    crashes at its 3rd dispatch and stays down) or ``"hang"`` (r0's 3rd
+    dispatch stalls past the dispatch timeout). Returns the resilience
+    counters plus the three gate verdicts."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import gan
+    from repro.serve import BucketPolicy, GenRequest
+    from repro.serve.fault_injection import (
+        ServeFaultInjector,
+        ServeFaultPlan,
+    )
+    from repro.serve.replica import Replica
+    from repro.serve.supervisor import ReplicaSupervisor
+
+    cfg = gan.reduced_config(gan.GAN_ZOO["dcgan"], scale=64)
+    params = gan.generator_init(jax.random.key(0), cfg)
+    n_requests = 24 if quick else 64
+
+    if fault == "kill":
+        plan = ServeFaultPlan(crash_at=(("r0", 3),))
+        timeout_s = 5.0            # generous: the kill run gates routing
+    else:
+        plan = ServeFaultPlan(hang_at=(("r0", 3, 1.0),))
+        timeout_s = 0.2            # tight: the hang must overshoot it
+
+    inj = ServeFaultInjector(plan)
+    replicas = [Replica("r0", dispatch_hook=inj.hook),
+                Replica("r1", dispatch_hook=inj.hook)]
+    sup = ReplicaSupervisor(
+        replicas,
+        BucketPolicy(buckets=(1, 2, 4), max_wait_s=0.05,
+                     max_queue=4 * n_requests),
+        retry_budget=4, timeout_s=timeout_s,
+    )
+    sup.register(cfg, params)
+    sup.warmup()
+    warm = dict(sup.replica_recompiles)
+
+    trace = make_trace(["dcgan"], cfg.z_dim, n_requests, seed=7)
+    reqs = [GenRequest(m, z) for m, z in trace]
+    t0 = time.perf_counter()
+    sup.serve(reqs)
+    wall_s = time.perf_counter() - t0
+
+    # gate 1: recovered — everything done, ledger balanced, batch requeued
+    ledger = sup.conservation()
+    recovered = (
+        all(r.done for r in reqs)
+        and bool(ledger["ok"])
+        and sup.metrics.requeues >= 1
+        and any(e[0] == fault.replace("kill", "crash") for e in inj.fired)
+    )
+    # gate 2: retried outputs bitwise-equal to unbatched generator_apply
+    retried = [r for r in reqs if r.retries > 0]
+    sample = retried + [r for r in reqs if r.retries == 0][:4]
+    bitwise_equal = all(
+        r.done and np.array_equal(
+            np.asarray(r.output),
+            np.asarray(gan.generator_apply(params, cfg, jnp.asarray(r.z))),
+        )
+        for r in sample
+    )
+    # gate 3: no replica retraced under the fault, no inline compile
+    steady = {rid: n - warm[rid]
+              for rid, n in sup.replica_recompiles.items()}
+    zero_retraces = (all(v == 0 for v in steady.values())
+                     and sup.metrics.recompiles == 0)
+
+    m = sup.metrics
+    return {
+        "fault": fault,
+        "n_requests": n_requests,
+        "wall_s": wall_s,
+        "done": m.requests,
+        "failed": m.failed,
+        "retries": m.retries,
+        "requeues": m.requeues,
+        "timeouts": m.timeouts,
+        "nonfinite": m.nonfinite,
+        "probes": m.probes,
+        "degraded_batches": m.degraded_batches,
+        "replica_transitions": dict(m.transition_counts),
+        "replica_states": sup.replica_states(),
+        "retried_requests": len(retried),
+        "steady_recompiles": steady,
+        "conservation_ok": bool(ledger["ok"]),
+        "recovered": bool(recovered),
+        "bitwise_equal": bool(bitwise_equal),
+        "zero_retraces": bool(zero_retraces),
+    }
+
+
+def bench_chaos(*, quick: bool) -> dict:
+    """The serving chaos smoke: kill-one and hang-one runs (see
+    :func:`_chaos_run`) on a two-replica supervisor."""
+    return {f: _chaos_run(f, quick=quick) for f in ("kill", "hang")}
 
 
 def check(section: dict) -> list[str]:
     """The acceptance gates: bucketed serving must beat sequential dispatch
-    by the floor factor, with zero steady-state recompiles."""
+    by the floor factor with zero steady-state recompiles, and both chaos
+    runs must recover (requeue to the survivor, conserve every request,
+    bitwise-equal retried outputs, zero per-replica retraces)."""
     bad = []
     if section["speedup"] < SERVING_SPEEDUP_FLOOR:
         bad.append(
@@ -133,6 +253,12 @@ def check(section: dict) -> list[str]:
             f"serving: {section['recompiles_steady']} steady-state "
             "recompiles after warmup (must be 0)"
         )
+    for fault, run in section.get("chaos", {}).items():
+        for gate in ("recovered", "conservation_ok", "bitwise_equal",
+                     "zero_retraces"):
+            if not run[gate]:
+                bad.append(f"serving chaos [{fault}]: {gate} failed "
+                           f"({run})")
     return bad
 
 
@@ -148,6 +274,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     section = bench_serving(quick=args.quick)
+    section["chaos"] = bench_chaos(quick=args.quick)
 
     out_path = Path(args.out)
     merged = {}
@@ -174,6 +301,15 @@ def main(argv=None):
           f"(warmup {section['warmup_recompiles']}); "
           f"latency ms p50 {lat['p50'] * 1e3:.1f} p95 {lat['p95'] * 1e3:.1f} "
           f"p99 {lat['p99'] * 1e3:.1f}")
+    for fault, run in section["chaos"].items():
+        print(f"chaos [{fault}]: {run['done']}/{run['n_requests']} done in "
+              f"{run['wall_s']:.2f}s; {run['retries']} retries, "
+              f"{run['requeues']} requeues, {run['timeouts']} timeouts, "
+              f"{run['probes']} probes; transitions "
+              f"{run['replica_transitions']}; "
+              f"recovered={run['recovered']} "
+              f"bitwise={run['bitwise_equal']} "
+              f"zero_retraces={run['zero_retraces']}")
 
     bad = check(section)
     if bad:
@@ -182,7 +318,9 @@ def main(argv=None):
             raise SystemExit(1)
     elif args.check:
         print(f"# check ok: bucketed engine >= {SERVING_SPEEDUP_FLOOR}x "
-              "sequential per-request dispatch, zero steady-state recompiles")
+              "sequential per-request dispatch, zero steady-state "
+              "recompiles; chaos kill+hang runs recovered with "
+              "conservation, bitwise-equal retries, zero retraces")
 
 
 if __name__ == "__main__":

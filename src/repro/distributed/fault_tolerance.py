@@ -15,6 +15,13 @@ model the framework is built around. The pieces that live elsewhere:
   fault injection      train/fault_injection.py — every failure below made
                        deterministically injectable; tests/test_fault_injection.py
                        is the machine-checked version of this module
+  serving counterpart  serve/supervisor.py — the same failure model applied
+                       to inference: replica crash/hang/transient/poisoned
+                       output behind health-checked dispatch, with
+                       serve/fault_injection.py as the injection twin and
+                       tests/test_replica_serving.py + the serving bench's
+                       chaos gate as the machine check (docs/SERVING.md has
+                       the full failure -> response matrix)
 
 Failure model and responses
 ---------------------------
@@ -38,10 +45,18 @@ Failure model and responses
    (work stealing at the data layer — no tensor state moves); (b) the
    launcher stamps a deadline per step; hosts that miss it are reported to
    the scheduler for replacement rather than stalling the collective.
+   Serving-side: (a) becomes the supervisor's **batch requeue** (a failed
+   bucket goes back to the queue head and re-dispatches on a healthy
+   replica) and (b) becomes the per-(model, bucket) **dispatch timeout**
+   derived from the warmed step walls — a dispatch past its deadline is
+   discarded and the replica goes SUSPECT (serve/supervisor.py).
 
 4. **Silent data corruption.** The anomaly guard skips non-finite steps;
    paranoid mode (`Trainer(..., ckpt_every=k, keep_last=n)`) retains n
    checkpoints so a corrupted-but-finite run can be rolled back.
+   Serving-side: the supervisor's output finiteness guard — a NaN/Inf
+   output plane fails the dispatch and the batch is retried; a poisoned
+   output is never served.
 """
 from __future__ import annotations
 

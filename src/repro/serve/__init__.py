@@ -2,3 +2,10 @@ from repro.serve.batching import BucketPolicy, QueueFull, pow2_buckets
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.gan_engine import GanEngine, GenRequest
 from repro.serve.metrics import ServeMetrics
+from repro.serve.replica import Replica
+from repro.serve.supervisor import (
+    DispatchTimeout,
+    NonFiniteOutput,
+    ReplicaState,
+    ReplicaSupervisor,
+)

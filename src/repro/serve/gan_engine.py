@@ -59,6 +59,22 @@ class GenRequest:
     ``metrics.expired``, and left ``done=False`` with ``expired=True`` —
     the client is told, never silently handed stale output it has already
     given up waiting for.
+
+    Every request the engine touches reaches exactly one **terminal
+    state** (the conservation invariant — nothing is silently lost):
+
+    * ``done`` — served; ``output`` holds the generated samples.
+    * ``expired`` — deadline passed while queued; never dispatched.
+    * ``rejected`` — refused at admission (backpressure ``QueueFull``).
+    * ``failed`` — admitted but terminally unservable (malformed in
+      replay mode, retry budget exhausted, or shed with every replica
+      dead under the :class:`~repro.serve.supervisor.ReplicaSupervisor`).
+
+    ``t_done`` is stamped at completion AND at expiry/failure, so
+    ``latency_s`` (admission → terminal resolution) is measurable for
+    every resolved request, not just served ones. ``retries`` counts
+    dispatch attempts beyond the first; ``replica`` records which replica
+    (or ``"inline"`` fallback) served the request, when a supervisor did.
     """
 
     model: str
@@ -71,14 +87,37 @@ class GenRequest:
     output: object = None      # (n, H, W, C) on completion
     done: bool = False
     expired: bool = False
+    rejected: bool = False
+    failed: bool = False
+    retries: int = 0
+    replica: str | None = None
 
     @property
     def n(self) -> int:
         return int(np.shape(self.z)[0])
 
     @property
+    def terminal_state(self) -> str | None:
+        """``"done" | "expired" | "rejected" | "failed"`` — or None while
+        the request is still pending. Raises if the engine ever left the
+        request in more than one terminal state (a conservation bug)."""
+        states = [s for s in ("done", "expired", "rejected", "failed")
+                  if getattr(self, s)]
+        if len(states) > 1:
+            raise AssertionError(
+                f"request {self.rid} in {len(states)} terminal states: "
+                f"{states}"
+            )
+        return states[0] if states else None
+
+    @property
     def latency_s(self) -> float:
-        return self.t_done - self.t_submit if self.done else float("nan")
+        """Admission → terminal resolution. For served requests this is the
+        classic completion latency; for expired ones it is the queue
+        residence at purge (``t_done`` is stamped then too)."""
+        if self.done or self.expired or self.failed or self.rejected:
+            return self.t_done - self.t_submit
+        return float("nan")
 
 
 @dataclasses.dataclass
@@ -235,14 +274,16 @@ class GanEngine:
                 f"deadline_s must be positive, got {req.deadline_s}"
             )
         if self.queued_samples + n > self.policy.max_queue:
-            self.metrics.record_reject()
+            req.rejected = True
+            req.t_submit = req.t_done = self.clock()
+            self.metrics.record_reject(req.model)
             raise QueueFull(
                 f"queue holds {self.queued_samples} samples, request of {n} "
                 f"exceeds max_queue={self.policy.max_queue}"
             )
         req.rid = next(self._rid)
         req.t_submit = self.clock()
-        self.metrics.record_admit(req.t_submit)
+        self.metrics.record_admit(req.t_submit, req.model)
         slot.queue.append(req)
         return req.rid
 
@@ -254,7 +295,7 @@ class GanEngine:
         can expire behind a patient head). Runs before every dispatch
         decision, so an expired request is never packed into a batch."""
         dropped = 0
-        for slot in self.registry.values():
+        for name, slot in self.registry.items():
             if not any(
                 r.deadline_s is not None
                 and now - r.t_submit > r.deadline_s
@@ -266,7 +307,10 @@ class GanEngine:
                 if (r.deadline_s is not None
                         and now - r.t_submit > r.deadline_s):
                     r.expired = True
-                    self.metrics.record_expired(now)
+                    r.t_done = now   # stamp: time-to-expiry is measurable
+                    self.metrics.record_expired(
+                        now, residence_s=now - r.t_submit, model=name
+                    )
                     dropped += 1
                 else:
                     keep.append(r)
@@ -305,12 +349,10 @@ class GanEngine:
         self._execute(name, reqs, bucket)
         return True
 
-    def _execute(self, name: str, reqs: list, bucket: int) -> None:
-        """Pad-and-mask dispatch: concatenate the requests' latents, pad
-        with zero rows up to the bucket, run the precompiled executable,
-        slice each request's contiguous rows back out (the mask is the
-        slice — pad rows never reach a client)."""
-        slot = self.registry[name]
+    def _pack_latents(self, reqs: list, bucket: int):
+        """Concatenate the requests' latents and pad with zero rows up to
+        the bucket. Returns ``(z, n_real)`` with ``z`` a host array of
+        ``bucket`` rows."""
         z = np.concatenate(
             [np.asarray(r.z, dtype=self.dtype) for r in reqs], axis=0
         )
@@ -319,19 +361,50 @@ class GanEngine:
             z = np.concatenate(
                 [z, np.zeros((bucket - n_real, z.shape[1]), z.dtype)], axis=0
             )
-        t0 = self.clock()
-        out = self._executable(name, bucket)(slot.params, jnp.asarray(z))
-        out = np.asarray(jax.block_until_ready(out))
+        return z, n_real
+
+    def _finalize(self, name: str, reqs: list, out, n_real: int,
+                  bucket: int, t0: float, *, replica: str | None = None) -> None:
+        """Complete a dispatched batch: record it, slice each request's
+        contiguous rows back out (the mask is the slice — pad rows never
+        reach a client), and mark every request done."""
         now = self.clock()
-        self.metrics.record_batch(n_real, bucket, now - t0, now)
+        self.metrics.record_batch(n_real, bucket, now - t0, now, model=name)
         row = 0
         for r in reqs:
             r.output = out[row : row + r.n]
             row += r.n
             r.done = True
             r.t_done = now
-            self.metrics.record_completion(r.latency_s)
+            r.replica = replica
+            self.metrics.record_completion(r.latency_s, model=name)
             self.completed.append(r)
+
+    def _execute(self, name: str, reqs: list, bucket: int) -> None:
+        """Pad-and-mask dispatch: pack the requests' latents up to the
+        bucket, run the precompiled executable, hand each request its
+        slice. The :class:`~repro.serve.supervisor.ReplicaSupervisor`
+        overrides this method (same pack/finalize helpers) to route the
+        packed bucket through health-checked replicas instead."""
+        slot = self.registry[name]
+        z, n_real = self._pack_latents(reqs, bucket)
+        t0 = self.clock()
+        out = self._executable(name, bucket)(slot.params, jnp.asarray(z))
+        out = np.asarray(jax.block_until_ready(out))
+        self._finalize(name, reqs, out, n_real, bucket, t0)
+
+    # -------------------------------------------------------- conservation
+
+    def conservation(self) -> dict:
+        """The terminal-state ledger (see :class:`GenRequest`): every
+        admitted request must be done, expired, failed, or still queued —
+        ``ok`` is False iff requests went missing (or were double-counted).
+        Rejected/malformed requests were refused at admission and are
+        reported alongside."""
+        c = self.metrics.conservation()
+        c["queued"] = self.queued_requests
+        c["ok"] = c["admitted"] == c["resolved"] + c["queued"]
+        return c
 
     # ---------------------------------------------------------------- run
 
@@ -350,10 +423,13 @@ class GanEngine:
         its arrival offset (seconds from replay start), batching between
         arrivals under the live policy (deadline flushes included), then
         drain. ``requests`` and ``arrivals_s`` are parallel sequences;
-        arrivals must be sorted ascending. Backpressure sheds load instead
-        of aborting the replay: a request rejected with
-        :class:`QueueFull` stays ``done=False`` (and counts in
-        ``metrics.rejected``) while the rest of the trace is served."""
+        arrivals must be sorted ascending. A live trace must keep serving
+        through bad requests, so admission errors never abort the replay:
+        a request rejected with :class:`QueueFull` is shed (``rejected``,
+        counted in ``metrics.rejected``) and a **malformed** request
+        (unknown model, bad latent shape — ``ValueError`` from
+        :meth:`submit`) is recorded as terminally ``failed`` and counted
+        in ``metrics.malformed``, while the rest of the trace is served."""
         order = list(zip(requests, arrivals_s))
         if any(b < a for (_, a), (_, b) in zip(order, order[1:])):
             raise ValueError("arrivals_s must be sorted ascending")
@@ -362,10 +438,18 @@ class GanEngine:
         while i < len(order) or self.queued_requests:
             now = self.clock() - t0
             while i < len(order) and order[i][1] <= now:
+                req = order[i][0]
                 try:
-                    self.submit(order[i][0])
+                    self.submit(req)
                 except QueueFull:
-                    pass   # shed: rejected request stays done=False
+                    pass   # shed: request marked rejected by submit
+                except ValueError:
+                    # malformed: count it, fail it, keep serving the trace
+                    req.failed = True
+                    req.t_submit = req.t_done = self.clock()
+                    self.metrics.record_malformed(
+                        getattr(req, "model", None)
+                    )
                 i += 1
             if self.step():
                 continue

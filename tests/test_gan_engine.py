@@ -486,3 +486,91 @@ def test_deadline_validation(tiny_dcgan):
     with pytest.raises(ValueError):
         eng.submit(GenRequest("dcgan", _z(rng, 1, cfg.z_dim),
                               deadline_s=-1.0))
+
+
+# ------------------------------------- engine: terminal-state accounting
+
+def test_expired_request_stamps_t_done_and_residence(tiny_dcgan):
+    """Expiry is a terminal resolution like any other: ``t_done`` is
+    stamped at purge so ``latency_s`` (queue residence) is measurable, and
+    the residence lands in ``metrics.expired_residence_s``."""
+    cfg, params = tiny_dcgan
+    clock = FakeClock()
+    eng = GanEngine(
+        BucketPolicy(buckets=(1, 2), max_wait_s=999.0, max_queue=64),
+        clock=clock,
+    )
+    eng.register(cfg, params)
+    eng.warmup()
+    rng = np.random.default_rng(15)
+    req = GenRequest("dcgan", _z(rng, 1, cfg.z_dim), deadline_s=0.05)
+    eng.submit(req)
+    t_submit = req.t_submit
+    clock.advance(0.3)
+    eng.step(drain=True)
+    assert req.expired and req.terminal_state == "expired"
+    assert req.t_done == clock.t                  # stamped at purge
+    assert req.latency_s == pytest.approx(clock.t - t_submit)
+    assert np.isfinite(req.latency_s)
+    assert eng.metrics.expired_residence_s == [pytest.approx(0.3)]
+    assert eng.metrics.summary()["expired_residence_s"]["p50"] == (
+        pytest.approx(0.3)
+    )
+
+
+def test_replay_malformed_request_failed_not_abort(tiny_dcgan):
+    """A live trace must keep serving through a bad request: a malformed
+    submit (unknown model / wrong latent shape) is terminally failed and
+    counted, and the rest of the trace is served — the replay never
+    aborts with the queue half-full."""
+    cfg, params = tiny_dcgan
+    eng = GanEngine(
+        BucketPolicy(buckets=(1, 2), max_wait_s=0.001, max_queue=64)
+    )
+    eng.register(cfg, params)
+    eng.warmup()
+    rng = np.random.default_rng(16)
+    good_a = GenRequest("dcgan", _z(rng, 1, cfg.z_dim))
+    unknown = GenRequest("nope", _z(rng, 1, cfg.z_dim))
+    bad_shape = GenRequest("dcgan", _z(rng, 1, cfg.z_dim + 3))
+    good_b = GenRequest("dcgan", _z(rng, 2, cfg.z_dim))
+    reqs = [good_a, unknown, bad_shape, good_b]
+    eng.replay(reqs, [0.0, 0.001, 0.002, 0.003])
+    assert good_a.done and good_b.done
+    assert unknown.failed and not unknown.done
+    assert bad_shape.failed and not bad_shape.done
+    assert unknown.terminal_state == "failed"
+    assert np.isfinite(unknown.latency_s)         # t_done stamped
+    assert eng.metrics.malformed == 2
+    assert eng.metrics.requests == 2
+    ledger = eng.conservation()
+    assert ledger["ok"] and ledger["admitted"] == 2
+
+
+def test_conservation_ledger_plain_engine(tiny_dcgan):
+    """The conservation ledger on the base engine: done + expired +
+    rejected splits exactly, mid-run the still-queued term balances."""
+    cfg, params = tiny_dcgan
+    clock = FakeClock()
+    eng = GanEngine(
+        BucketPolicy(buckets=(1, 2), max_wait_s=999.0, max_queue=2),
+        clock=clock,
+    )
+    eng.register(cfg, params)
+    eng.warmup()
+    rng = np.random.default_rng(17)
+    served = GenRequest("dcgan", _z(rng, 1, cfg.z_dim))
+    doomed = GenRequest("dcgan", _z(rng, 1, cfg.z_dim), deadline_s=0.01)
+    eng.submit(served)
+    eng.submit(doomed)
+    with pytest.raises(QueueFull):
+        eng.submit(GenRequest("dcgan", _z(rng, 1, cfg.z_dim)))
+    mid = eng.conservation()
+    assert mid["ok"] and mid["queued"] == 2 and mid["resolved"] == 0
+    clock.advance(0.1)
+    while eng.step(drain=True):
+        pass
+    end = eng.conservation()
+    assert end["ok"] and end["queued"] == 0
+    assert end["done"] == 1 and end["expired"] == 1 and end["rejected"] == 1
+    assert end["admitted"] == end["resolved"] == 2

@@ -293,3 +293,106 @@ def test_gemm_equals_reference(
             np.asarray(a, np.float32), np.asarray(w, np.float32),
             rtol=tol, atol=tol,
         )
+
+
+# ------------------------------------------------ serving: conservation
+
+_GAN_CACHE: dict = {}
+
+
+def _tiny_gan():
+    """Lazy module-level cache: params are built once per process, only
+    when hypothesis is present and the property actually runs."""
+    if not _GAN_CACHE:
+        from repro.models import gan
+
+        cfg = gan.reduced_config(gan.DCGAN)
+        _GAN_CACHE["cfg"] = cfg
+        _GAN_CACHE["params"] = gan.generator_init(jax.random.key(0), cfg)
+    return _GAN_CACHE["cfg"], _GAN_CACHE["params"]
+
+
+@given(
+    ops=st.lists(
+        st.tuples(
+            st.integers(0, 3),          # 0 submit, 1 step, 2 advance, 3 drain
+            st.integers(1, 2),          # latent rows for submits
+            st.floats(0.0, 0.2),        # deadline / clock delta
+        ),
+        min_size=1,
+        max_size=30,
+    ),
+)
+@settings(max_examples=10, deadline=None)
+def test_gan_serving_conservation_invariant(ops):
+    """The serving layer's headline invariant, as a property over arbitrary
+    interleavings of submit / step / clock-advance / drain: every admitted
+    request terminally resolves as EXACTLY one of done | expired | rejected,
+    and the ledger balances (``admitted == done + expired + failed`` once
+    drained). The deterministic chaos-flavored twin — same invariant under
+    injected replica crash/hang/NaN faults, runnable without hypothesis —
+    is ``test_replica_serving.py::
+    test_conservation_under_randomized_interleaving``."""
+    from repro.serve import BucketPolicy, GanEngine, GenRequest, QueueFull
+
+    class Clock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clock = Clock()
+    eng = GanEngine(
+        BucketPolicy(buckets=(1, 2), max_wait_s=0.05, max_queue=4),
+        clock=clock,
+    )
+    cfg, params = _tiny_gan()
+    eng.register(cfg, params)
+    rng = np.random.default_rng(0)
+
+    requests = []
+    for kind, n, f in ops:
+        if kind == 0:
+            deadline = f if 0.0 < f < 0.1 else None
+            req = GenRequest(
+                "dcgan",
+                rng.standard_normal((n, cfg.z_dim)).astype(np.float32),
+                deadline_s=deadline,
+            )
+            requests.append(req)
+            try:
+                eng.submit(req)
+            except QueueFull:
+                pass                      # terminally rejected by submit
+        elif kind == 1:
+            eng.step()
+        elif kind == 2:
+            clock.t += f
+        else:
+            eng.step(drain=True)
+        mid = eng.conservation()
+        assert mid["ok"], f"mid-run ledger imbalance: {mid}"
+
+    while eng.step(drain=True):
+        pass
+    eng._purge_expired(clock.t)
+
+    # exactly-one terminal state (the property raises on double-marking)
+    states = [r.terminal_state for r in requests]
+    assert all(s is not None for s in states)
+    from collections import Counter
+
+    c = Counter(states)
+    assert len(requests) == c["done"] + c["expired"] + c["rejected"]
+    ledger = eng.conservation()
+    assert ledger["ok"], ledger
+    assert ledger["queued"] == 0
+    assert ledger["admitted"] == ledger["resolved"]
+    assert ledger["done"] == c["done"]
+    assert ledger["expired"] == c["expired"]
+    assert ledger["rejected"] == c["rejected"]
+    # served requests carry finite latency and real output rows
+    for r in requests:
+        if r.done:
+            assert np.isfinite(r.latency_s)
+            assert np.shape(r.output)[0] == r.n

@@ -1,0 +1,153 @@
+"""The serving chaos harness itself: ServeFaultPlan / ServeFaultInjector
+determinism on the replica dispatch seam.
+
+These tests pin the harness's contract (faults fire at exact per-replica
+dispatch indices, crashes persist, hangs stall the injected clock,
+transients are one-shot, NaN poisons exactly one output, revival is
+probe-counted) so the resilience tests in ``test_replica_serving.py`` can
+trust their instrument.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.fault_injection import (
+    ReplicaCrash,
+    ServeFaultInjector,
+    ServeFaultPlan,
+    TransientDispatchError,
+)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+class FakeReplica:
+    """The injector only reads ``replica_id`` off the seam's first arg."""
+
+    def __init__(self, replica_id):
+        self.replica_id = replica_id
+
+
+def test_crash_fires_at_exact_index_and_persists():
+    inj = ServeFaultInjector(ServeFaultPlan(crash_at=(("r0", 3),)))
+    r0, r1 = FakeReplica("r0"), FakeReplica("r1")
+    assert inj.hook(r0, 1, "m", 4) is None
+    assert inj.hook(r0, 2, "m", 4) is None
+    with pytest.raises(ReplicaCrash):
+        inj.hook(r0, 3, "m", 4)
+    # crashed: every later dispatch AND probe refuses
+    with pytest.raises(ReplicaCrash):
+        inj.hook(r0, 4, "m", 4)
+    with pytest.raises(ReplicaCrash):
+        inj.hook(r0, 1, "m", 1, probe=True)
+    # other replicas are untouched
+    assert inj.hook(r1, 3, "m", 4) is None
+    assert inj.fired == [("crash", "r0", 3)]
+    assert inj.crashed == {"r0"}
+
+
+def test_transient_fires_once_then_clears():
+    inj = ServeFaultInjector(ServeFaultPlan(transient_at=(("r0", 2),)))
+    r0 = FakeReplica("r0")
+    assert inj.hook(r0, 1, "m", 2) is None
+    with pytest.raises(TransientDispatchError):
+        inj.hook(r0, 2, "m", 2)
+    assert inj.hook(r0, 3, "m", 2) is None       # next dispatch succeeds
+    assert inj.fired == [("transient", "r0", 2)]
+
+
+def test_hang_advances_fake_clock_and_lets_dispatch_through():
+    clock = FakeClock()
+    inj = ServeFaultInjector(
+        ServeFaultPlan(hang_at=(("r0", 1, 2.5),)), clock=clock
+    )
+    r0 = FakeReplica("r0")
+    assert inj.hook(r0, 1, "m", 2) is None       # completes — but LATE
+    assert clock.t == 2.5
+    assert inj.hook(r0, 2, "m", 2) is None       # one-shot
+    assert clock.t == 2.5
+    assert inj.fired == [("hang", "r0", 1)]
+
+
+def test_hang_without_fake_clock_sleeps(monkeypatch):
+    slept = []
+    import repro.serve.fault_injection as fi
+
+    monkeypatch.setattr(fi.time, "sleep", lambda s: slept.append(s))
+    inj = ServeFaultInjector(ServeFaultPlan(hang_at=(("r0", 1, 0.25),)))
+    inj.hook(FakeReplica("r0"), 1, "m", 1)
+    assert slept == [0.25]
+
+
+def test_nan_poisons_exactly_one_plane_of_one_dispatch():
+    inj = ServeFaultInjector(ServeFaultPlan(nan_at=(("r0", 2),)))
+    r0 = FakeReplica("r0")
+    assert inj.hook(r0, 1, "m", 2) is None
+    transform = inj.hook(r0, 2, "m", 2)
+    assert transform is not None
+    clean = np.ones((2, 4, 4, 1), np.float32)
+    poisoned = transform(clean)
+    assert np.isnan(poisoned[0]).all()
+    assert np.isfinite(poisoned[1]).all()
+    assert np.isfinite(clean).all()              # original untouched
+    assert inj.hook(r0, 3, "m", 2) is None
+    assert inj.fired == [("nan", "r0", 2)]
+
+
+def test_probes_refused_while_crashed_until_revival_count():
+    inj = ServeFaultInjector(ServeFaultPlan(
+        crash_at=(("r0", 1),), revive_after_probes=(("r0", 3),)
+    ))
+    r0 = FakeReplica("r0")
+    with pytest.raises(ReplicaCrash):
+        inj.hook(r0, 1, "m", 1)
+    for n in (1, 2):
+        with pytest.raises(ReplicaCrash):
+            inj.hook(r0, n, "m", 1, probe=True)
+    assert inj.hook(r0, 3, "m", 1, probe=True) is None    # revived
+    assert "r0" not in inj.crashed
+    assert inj.hook(r0, 2, "m", 1) is None       # dispatches work again
+    assert inj.fired == [("crash", "r0", 1), ("revive", "r0", 3)]
+
+
+def test_probe_of_healthy_replica_passes_through():
+    inj = ServeFaultInjector(ServeFaultPlan())
+    assert inj.hook(FakeReplica("r0"), 1, "m", 1, probe=True) is None
+    assert inj.fired == []
+
+
+def test_identical_plans_fire_identically():
+    """Chaos runs are reproducible: the same plan driven by the same
+    dispatch sequence fires the same events in the same order."""
+    plan = ServeFaultPlan(
+        crash_at=(("r1", 2),), transient_at=(("r0", 1),),
+        nan_at=(("r0", 3),), revive_after_probes=(("r1", 2),),
+    )
+
+    def drive(inj):
+        r0, r1 = FakeReplica("r0"), FakeReplica("r1")
+        for rep, idx in ((r0, 1), (r0, 2), (r1, 1), (r1, 2),
+                         (r0, 3), (r1, 3)):
+            try:
+                inj.hook(rep, idx, "m", 2)
+            except (ReplicaCrash, TransientDispatchError):
+                pass
+        for n in (1, 2):
+            try:
+                inj.hook(r1, n, "m", 1, probe=True)
+            except ReplicaCrash:
+                pass
+        return list(inj.fired)
+
+    a = drive(ServeFaultInjector(plan))
+    b = drive(ServeFaultInjector(plan))
+    assert a == b
+    assert [e[0] for e in a] == ["transient", "crash", "nan", "revive"]
