@@ -97,6 +97,7 @@ from repro.kernels.transpose_conv2d_bwd import (
     default_bwd_tiles,
     default_dw_tile,
 )
+from repro.obs import audit as obs_audit
 from repro.timing import time_fn as _time_fn
 
 # Nominal accelerator peaks for the roofline proxy (TPU v4-ish; only the
@@ -1208,6 +1209,10 @@ def tune_layer(
     )
     # one disk write per tune_layer: intermediate directions stay in memory
     record(key, fwd_entry, direction="fwd", persist=persist and not train)
+    obs_audit.get_trail().record_decision(
+        kind="layer", key=key, direction="fwd", entry=fwd_entry,
+        backend=backend, persist=persist and not train,
+    )
     if not train:
         return lookup(key)
 
@@ -1217,11 +1222,19 @@ def tune_layer(
         x, k, bvec, padding, include_pallas, repeats, warmup, epilogue
     )
     record(key, bwd_entry, direction="bwd", persist=False)
+    obs_audit.get_trail().record_decision(
+        kind="layer", key=key, direction="bwd", entry=bwd_entry,
+        backend=backend, persist=False,
+    )
     step_entry = _tune_step(
         x, k, bvec, padding, lax_methods, pallas_methods, include_pallas,
         repeats, warmup, fwd_tiles, gemm_tiles, epilogue,
     )
     record(key, step_entry, direction="step", persist=persist)
+    obs_audit.get_trail().record_decision(
+        kind="layer", key=key, direction="step", entry=step_entry,
+        backend=backend, persist=persist,
+    )
     return lookup(key)
 
 
@@ -1279,6 +1292,10 @@ def tune_pair(
             "proxy": proxy,
         }
         record(key, entry, direction="pair", persist=persist)
+        obs_audit.get_trail().record_decision(
+            kind="pair", key=key, direction="pair", entry=entry,
+            backend=backend, persist=persist,
+        )
         return lookup(key)
 
     from repro.kernels.transpose_conv2d import transpose_conv2d_pallas
@@ -1347,6 +1364,10 @@ def tune_pair(
     if winner == "pallas_pair":
         entry["tile_ci"], entry["tile_mid"], entry["tile_co"] = tiles
     record(key, entry, direction="pair", persist=persist)
+    obs_audit.get_trail().record_decision(
+        kind="pair", key=key, direction="pair", entry=entry,
+        backend=backend, persist=persist,
+    )
     return lookup(key)
 
 

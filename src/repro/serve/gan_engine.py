@@ -45,6 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs
+from repro.obs.timeline import TimelineStore
 from repro.serve.batching import BucketPolicy, QueueFull
 from repro.serve.metrics import ServeMetrics
 
@@ -139,7 +141,7 @@ class GanEngine:
 
     def __init__(self, policy: BucketPolicy | None = None, *,
                  dtype="float32", train: bool = False, fuse="auto",
-                 clock=time.monotonic):
+                 clock=time.monotonic, recorder=None):
         self.policy = policy or BucketPolicy()
         self.dtype = str(jnp.dtype(dtype))
         self.train = train
@@ -150,6 +152,17 @@ class GanEngine:
         self.completed: list[GenRequest] = []   # completion order
         self.warmup_recompiles: int | None = None
         self._rid = itertools.count()
+        # Observability (docs/OBSERVABILITY.md): per-request lifecycle
+        # timelines, populated only while tracing is enabled; an optional
+        # flight recorder shadows terminal anomalies regardless of the flag.
+        self.timeline = TimelineStore()
+        self.recorder = recorder
+
+    def _tl(self, rid, event: str, t: float, *, model=None, **attrs) -> None:
+        """Record one request-lifecycle edge — one flag check when off."""
+        if not obs.enabled():
+            return
+        self.timeline.event(rid, event, t, model=model, **attrs)
 
     # ----------------------------------------------------------- registry
 
@@ -277,6 +290,11 @@ class GanEngine:
             req.rejected = True
             req.t_submit = req.t_done = self.clock()
             self.metrics.record_reject(req.model)
+            # no rid was assigned (backpressure precedes assignment, pinned
+            # by the rid==-1 test) — timeline under a synthetic id
+            self._tl(f"reject#{self.metrics.rejected}", "reject", req.t_done,
+                     model=req.model, n=n)
+            obs.counter("serve.rejected")
             raise QueueFull(
                 f"queue holds {self.queued_samples} samples, request of {n} "
                 f"exceeds max_queue={self.policy.max_queue}"
@@ -285,6 +303,11 @@ class GanEngine:
         req.t_submit = self.clock()
         self.metrics.record_admit(req.t_submit, req.model)
         slot.queue.append(req)
+        self._tl(req.rid, "admit", req.t_submit, model=req.model, n=n,
+                 deadline_s=req.deadline_s)
+        self._tl(req.rid, "queue", req.t_submit, depth=len(slot.queue),
+                 queued_samples=self.queued_samples)
+        obs.counter("serve.admitted")
         return req.rid
 
     # --------------------------------------------------------------- step
@@ -311,6 +334,9 @@ class GanEngine:
                     self.metrics.record_expired(
                         now, residence_s=now - r.t_submit, model=name
                     )
+                    self._tl(r.rid, "expire", now, model=name,
+                             residence_s=now - r.t_submit)
+                    obs.counter("serve.expired")
                     dropped += 1
                 else:
                     keep.append(r)
@@ -353,14 +379,21 @@ class GanEngine:
         """Concatenate the requests' latents and pad with zero rows up to
         the bucket. Returns ``(z, n_real)`` with ``z`` a host array of
         ``bucket`` rows."""
-        z = np.concatenate(
-            [np.asarray(r.z, dtype=self.dtype) for r in reqs], axis=0
-        )
-        n_real = z.shape[0]
-        if n_real < bucket:
+        with obs.span("serve.pack", bucket=bucket, reqs=len(reqs)):
             z = np.concatenate(
-                [z, np.zeros((bucket - n_real, z.shape[1]), z.dtype)], axis=0
+                [np.asarray(r.z, dtype=self.dtype) for r in reqs], axis=0
             )
+            n_real = z.shape[0]
+            if n_real < bucket:
+                z = np.concatenate(
+                    [z, np.zeros((bucket - n_real, z.shape[1]), z.dtype)],
+                    axis=0,
+                )
+        if obs.enabled():
+            t = self.clock()
+            for r in reqs:
+                self._tl(r.rid, "pack", t, model=r.model, bucket=bucket,
+                         n_real=n_real)
         return z, n_real
 
     def _finalize(self, name: str, reqs: list, out, n_real: int,
@@ -370,15 +403,21 @@ class GanEngine:
         reach a client), and mark every request done."""
         now = self.clock()
         self.metrics.record_batch(n_real, bucket, now - t0, now, model=name)
-        row = 0
-        for r in reqs:
-            r.output = out[row : row + r.n]
-            row += r.n
-            r.done = True
-            r.t_done = now
-            r.replica = replica
-            self.metrics.record_completion(r.latency_s, model=name)
-            self.completed.append(r)
+        with obs.span("serve.slice", model=name, reqs=len(reqs)):
+            row = 0
+            for r in reqs:
+                r.output = out[row : row + r.n]
+                row += r.n
+                r.done = True
+                r.t_done = now
+                r.replica = replica
+                self.metrics.record_completion(r.latency_s, model=name)
+                self.completed.append(r)
+                self._tl(r.rid, "slice", now, model=name, rows=r.n)
+                self._tl(r.rid, "reply", now, model=name,
+                         latency_s=r.latency_s, replica=replica)
+        obs.counter("serve.completed", len(reqs))
+        obs.observe("serve.batch_wall_s", now - t0)
 
     def _execute(self, name: str, reqs: list, bucket: int) -> None:
         """Pad-and-mask dispatch: pack the requests' latents up to the
@@ -389,8 +428,13 @@ class GanEngine:
         slot = self.registry[name]
         z, n_real = self._pack_latents(reqs, bucket)
         t0 = self.clock()
-        out = self._executable(name, bucket)(slot.params, jnp.asarray(z))
-        out = np.asarray(jax.block_until_ready(out))
+        if obs.enabled():
+            for r in reqs:
+                self._tl(r.rid, "dispatch", t0, model=name, bucket=bucket)
+        with obs.span("serve.dispatch", model=name, bucket=bucket,
+                      n_real=n_real):
+            out = self._executable(name, bucket)(slot.params, jnp.asarray(z))
+            out = np.asarray(jax.block_until_ready(out))
         self._finalize(name, reqs, out, n_real, bucket, t0)
 
     # -------------------------------------------------------- conservation
@@ -450,6 +494,10 @@ class GanEngine:
                     self.metrics.record_malformed(
                         getattr(req, "model", None)
                     )
+                    self._tl(f"malformed#{self.metrics.malformed}", "fail",
+                             req.t_done, model=getattr(req, "model", None),
+                             reason="malformed")
+                    obs.counter("serve.malformed")
                 i += 1
             if self.step():
                 continue

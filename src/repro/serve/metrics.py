@@ -51,23 +51,23 @@ satisfy ``admitted == requests + expired + failed`` (``rejected`` and
 additionally recorded under its model name, so multi-model degradation is
 attributable — ``summary()["per_model"]`` and the extra ``describe()``
 lines break latency, throughput, and retries down by model.
+
+Percentile math lives in :func:`repro.obs.trace.percentiles` (shared with
+the training timer and the Prometheus exporter); :meth:`publish` flattens
+the counters and latency series into the process-global obs tracer so one
+:func:`repro.obs.export.prometheus_text` call exposes serving, training,
+and autotune through a single registry.
 """
 from __future__ import annotations
 
-import numpy as np
+from collections import deque
 
+from repro.obs.trace import percentiles as _percentiles
 
-def _percentiles(latencies) -> dict:
-    if not latencies:
-        return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0, "max": 0.0}
-    a = np.asarray(latencies)
-    return {
-        "p50": float(np.percentile(a, 50)),
-        "p95": float(np.percentile(a, 95)),
-        "p99": float(np.percentile(a, 99)),
-        "mean": float(a.mean()),
-        "max": float(a.max()),
-    }
+# Bounded history rings: the edge/probe COUNTS stay exact forever; only the
+# per-event logs are capped so long chaos runs cannot grow without limit.
+TRANSITION_LOG_CAP = 256
+PROBE_LOG_CAP = 256
 
 
 class ServeMetrics:
@@ -99,7 +99,9 @@ class ServeMetrics:
         self.probes: int = 0              # replica health probes
         self.probe_failures: int = 0
         self.degraded_batches: int = 0    # inline-fallback dispatches
-        self.transitions: list = []       # (t, replica, old, new, reason)
+        # bounded event logs (counts above stay exact; see module docstring)
+        self.transitions: deque = deque(maxlen=TRANSITION_LOG_CAP)
+        self.probe_log: deque = deque(maxlen=PROBE_LOG_CAP)
         self.transition_counts: dict = {}  # "OLD->NEW" -> count
         self.per_model: dict = {}         # model -> label dict
 
@@ -207,17 +209,35 @@ class ServeMetrics:
         if pm is not None:
             pm["failed"] += 1
 
-    def record_probe(self, ok: bool) -> None:
+    def record_probe(self, ok: bool, *, now: float | None = None,
+                     replica: str | None = None, state: str | None = None,
+                     backoff_s: float | None = None,
+                     next_probe_at: float | None = None) -> None:
+        """Count a health probe; when the supervisor passes the stamping
+        kwargs, the outcome also lands in the bounded ``probe_log`` with the
+        resulting state, current backoff, and the deadline of the NEXT probe
+        — enough to reconstruct the DEAD→RECOVERING arc offline."""
         self.probes += 1
         if not ok:
             self.probe_failures += 1
+        if now is not None or replica is not None:
+            self.probe_log.append({
+                "t": now, "replica": replica, "ok": ok, "state": state,
+                "backoff_s": backoff_s, "next_probe_at": next_probe_at,
+            })
 
     def record_degraded_batch(self) -> None:
         self.degraded_batches += 1
 
     def record_transition(self, now: float, replica: str, old: str,
-                          new: str, reason: str) -> None:
-        self.transitions.append((now, replica, old, new, reason))
+                          new: str, reason: str, *,
+                          backoff_s: float | None = None,
+                          next_probe_at: float | None = None) -> None:
+        self.transitions.append({
+            "t": now, "replica": replica, "old": old, "new": new,
+            "reason": reason, "backoff_s": backoff_s,
+            "next_probe_at": next_probe_at,
+        })
         key = f"{old}->{new}"
         self.transition_counts[key] = self.transition_counts.get(key, 0) + 1
 
@@ -236,6 +256,33 @@ class ServeMetrics:
 
     def latency_percentiles(self) -> dict:
         return _percentiles(self.latencies_s)
+
+    def publish(self, tracer=None, prefix: str = "serve") -> None:
+        """Flatten the current counters, gauges, and latency series into an
+        obs :class:`~repro.obs.trace.Tracer` (the process-global one by
+        default) so :func:`repro.obs.export.prometheus_text` exposes serving
+        next to training and autotune. Counters are published as absolute
+        totals (gauge-set, not incremented) so repeated publishes are
+        idempotent."""
+        from repro.obs.trace import get_tracer
+        tr = tracer if tracer is not None else get_tracer()
+        s = self.summary()
+        for key in ("admitted", "requests", "samples", "batches", "rejected",
+                    "malformed", "expired", "failed", "recompiles", "retries",
+                    "requeues", "timeouts", "nonfinite", "shed", "probes",
+                    "probe_failures", "degraded_batches"):
+            tr.gauge(f"{prefix}.{key}_total", float(s[key]))
+        for key in ("requests_per_s", "samples_per_s", "pad_waste",
+                    "elapsed_s", "batch_wall_s"):
+            tr.gauge(f"{prefix}.{key}", float(s[key]))
+        for edge, n in self.transition_counts.items():
+            tr.gauge(f"{prefix}.transition.{edge}", float(n))
+        for name, series in ((f"{prefix}.latency_s", self.latencies_s),
+                             (f"{prefix}.expired_residence_s",
+                              self.expired_residence_s)):
+            tr.observations.pop(name, None)  # republish, don't duplicate
+            for v in series:
+                tr.observe(name, v)
 
     def conservation(self) -> dict:
         """The terminal-state ledger: every admitted request must end as

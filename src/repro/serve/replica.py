@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs
+
 
 @dataclasses.dataclass
 class _ReplicaModel:
@@ -161,17 +163,19 @@ class Replica:
         the dispatch — and its optional output transform is applied to the
         host array before returning (never to what other replicas see)."""
         self.dispatches += 1
-        transform = None
-        if self.dispatch_hook is not None:
-            transform = self.dispatch_hook(
-                self, self.dispatches, name, bucket, probe=False
-            )
-        slot = self.registry[name]
-        out = self._executable(name, bucket)(slot.params, jnp.asarray(z))
-        out = np.asarray(jax.block_until_ready(out))
-        if transform is not None:
-            out = transform(out)
-        return out
+        with obs.span("replica.execute", replica=self.replica_id,
+                      model=name, bucket=bucket):
+            transform = None
+            if self.dispatch_hook is not None:
+                transform = self.dispatch_hook(
+                    self, self.dispatches, name, bucket, probe=False
+                )
+            slot = self.registry[name]
+            out = self._executable(name, bucket)(slot.params, jnp.asarray(z))
+            out = np.asarray(jax.block_until_ready(out))
+            if transform is not None:
+                out = transform(out)
+            return out
 
     def probe(self) -> bool:
         """Health probe: run the smallest-bucket executable of the first
@@ -186,17 +190,19 @@ class Replica:
         name, slot = next(iter(self.registry.items()))
         bucket = min(slot.apply) if slot.apply else 1
         self.probe_count += 1
-        transform = None
-        if self.dispatch_hook is not None:
-            transform = self.dispatch_hook(
-                self, self.probe_count, name, bucket, probe=True
-            )
-        z0 = jnp.zeros((bucket, slot.cfg.z_dim), self.dtype)
-        out = self._executable(name, bucket)(slot.params, z0)
-        out = np.asarray(jax.block_until_ready(out))
-        if transform is not None:
-            out = transform(out)
-        return bool(np.isfinite(out).all())
+        with obs.span("replica.probe", replica=self.replica_id,
+                      model=name, bucket=bucket):
+            transform = None
+            if self.dispatch_hook is not None:
+                transform = self.dispatch_hook(
+                    self, self.probe_count, name, bucket, probe=True
+                )
+            z0 = jnp.zeros((bucket, slot.cfg.z_dim), self.dtype)
+            out = self._executable(name, bucket)(slot.params, z0)
+            out = np.asarray(jax.block_until_ready(out))
+            if transform is not None:
+                out = transform(out)
+            return bool(np.isfinite(out).all())
 
     def describe(self) -> str:
         return (

@@ -77,6 +77,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs
 from repro.serve.gan_engine import GanEngine
 from repro.serve.replica import Replica
 
@@ -116,9 +117,10 @@ class ReplicaSupervisor(GanEngine):
                  min_timeout_s: float = 0.05, probe_backoff_s: float = 0.05,
                  probe_backoff_max_s: float = 5.0,
                  degraded_mode: str = "inline", dtype="float32",
-                 train: bool = False, fuse="auto", clock=time.monotonic):
+                 train: bool = False, fuse="auto", clock=time.monotonic,
+                 recorder=None):
         super().__init__(policy, dtype=dtype, train=train, fuse=fuse,
-                         clock=clock)
+                         clock=clock, recorder=recorder)
         replicas = list(replicas)
         if not replicas:
             raise ValueError("supervisor needs at least one replica")
@@ -200,12 +202,31 @@ class ReplicaSupervisor(GanEngine):
         if old is new:
             return
         slot.state = new
-        self.metrics.record_transition(
-            now, slot.replica.replica_id, old.value, new.value, reason
-        )
         if new in (ReplicaState.DEAD, ReplicaState.SUSPECT):
             slot.backoff_s = self.probe_backoff_s
             slot.next_probe_at = now + slot.backoff_s
+        rid = slot.replica.replica_id
+        # record AFTER the backoff update so the log entry carries the
+        # deadline of the next probe (the DEAD->RECOVERING arc is
+        # reconstructable offline)
+        self.metrics.record_transition(
+            now, rid, old.value, new.value, reason,
+            backoff_s=slot.backoff_s, next_probe_at=slot.next_probe_at,
+        )
+        obs.event("replica.transition", replica=rid, old=old.value,
+                  new=new.value, reason=reason)
+        if self.recorder is not None:
+            self.recorder.record(
+                "replica.transition", replica=rid, old=old.value,
+                new=new.value, reason=reason, backoff_s=slot.backoff_s,
+                next_probe_at=slot.next_probe_at,
+            )
+            if new is ReplicaState.DEAD:
+                self.recorder.dump(
+                    f"replica_dead:{rid}",
+                    extra={"states": self.replica_states(),
+                           "conservation": self.metrics.conservation()},
+                )
 
     def _on_dispatch_success(self, slot: _ReplicaSlot, now: float) -> None:
         self._transition(slot, ReplicaState.HEALTHY, "dispatch ok", now)
@@ -231,11 +252,11 @@ class ReplicaSupervisor(GanEngine):
                 continue
             if now < slot.next_probe_at:
                 continue
-            try:
-                ok = slot.replica.probe()
-            except Exception:
-                ok = False
-            self.metrics.record_probe(ok)
+            with obs.span("serve.probe", replica=slot.replica.replica_id):
+                try:
+                    ok = slot.replica.probe()
+                except Exception:
+                    ok = False
             if ok:
                 new = (ReplicaState.HEALTHY
                        if slot.state is ReplicaState.SUSPECT
@@ -249,6 +270,14 @@ class ReplicaSupervisor(GanEngine):
                     slot.backoff_s = min(slot.backoff_s * 2,
                                          self.probe_backoff_max_s)
                     slot.next_probe_at = self.clock() + slot.backoff_s
+            # stamp the outcome AFTER the state/backoff update: the log
+            # entry carries the resulting state and the next probe's
+            # deadline (the bugfix — previously only ok/fail was counted)
+            self.metrics.record_probe(
+                ok, now=now, replica=slot.replica.replica_id,
+                state=slot.state.value, backoff_s=slot.backoff_s,
+                next_probe_at=slot.next_probe_at,
+            )
 
     def _pick_replica(self, now: float) -> _ReplicaSlot | None:
         """An idle routable replica: HEALTHY and RECOVERING share the
@@ -280,8 +309,15 @@ class ReplicaSupervisor(GanEngine):
             self._degrade(name, reqs, z, n_real, bucket)
             return
         t0 = self.clock()
+        if obs.enabled():
+            for r in reqs:
+                self._tl(r.rid, "dispatch", t0, model=name, bucket=bucket,
+                         replica=rslot.replica.replica_id)
         try:
-            out = rslot.replica.execute(name, z, bucket)
+            with obs.span("serve.dispatch", model=name, bucket=bucket,
+                          n_real=n_real,
+                          replica=rslot.replica.replica_id):
+                out = rslot.replica.execute(name, z, bucket)
         except Exception as e:
             self._dispatch_failed(rslot, name, reqs,
                                   type(e).__name__, self.clock())
@@ -296,6 +332,15 @@ class ReplicaSupervisor(GanEngine):
             return
         if not np.isfinite(out).all():
             self.metrics.record_nonfinite()
+            if self.recorder is not None:
+                self.recorder.record(
+                    "nonfinite", replica=rslot.replica.replica_id,
+                    model=name, bucket=bucket,
+                )
+                self.recorder.dump(
+                    f"nonfinite:{rslot.replica.replica_id}",
+                    extra={"model": name, "bucket": bucket},
+                )
             self._dispatch_failed(rslot, name, reqs, "non-finite output",
                                   self.clock())
             return
@@ -317,8 +362,12 @@ class ReplicaSupervisor(GanEngine):
                 r.failed = True
                 r.t_done = now
                 self.metrics.record_failed(now, model=name)
+                self._tl(r.rid, "fail", now, model=name, reason=reason,
+                         retries=r.retries)
             else:
                 survivors.append(r)
+                self._tl(r.rid, "retry", now, model=name, reason=reason,
+                         attempt=r.retries)
         if survivors:
             self.registry[name].queue.extendleft(reversed(survivors))
             self.metrics.record_requeue()
@@ -350,6 +399,7 @@ class ReplicaSupervisor(GanEngine):
             r.failed = True
             r.t_done = now
             self.metrics.record_failed(now, model=name, shed=True)
+            self._tl(r.rid, "fail", now, model=name, reason="shed")
 
     # ------------------------------------------------------------ display
 

@@ -12,6 +12,8 @@ import time
 import jax
 import numpy as np
 
+from repro.obs.trace import percentiles as _percentiles
+
 
 def time_fn(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
     """Median wall time (seconds) of fn(*args) with block_until_ready."""
@@ -31,7 +33,9 @@ class StepTimer:
     ``tick()`` after each (blocked) step returns that step's seconds and
     appends it to the history; ``mean(skip=...)`` summarizes the
     steady-state step time with the first ``skip`` steps (compilation)
-    excluded.
+    excluded. Percentile summaries ride on the shared obs helper
+    (:func:`repro.obs.trace.percentiles`) so training step walls and
+    serving latencies report through the same math.
     """
 
     def __init__(self) -> None:
@@ -45,10 +49,17 @@ class StepTimer:
         self.steps.append(dt)
         return dt
 
+    def _tail(self, skip: int) -> list[float]:
+        return self.steps[skip:] or self.steps
+
     def mean(self, skip: int = 1) -> float:
-        tail = self.steps[skip:] or self.steps
-        return float(np.mean(tail)) if tail else 0.0
+        tail = self._tail(skip)
+        return _percentiles(tail)["mean"] if tail else 0.0
 
     def median(self, skip: int = 1) -> float:
-        tail = self.steps[skip:] or self.steps
-        return float(np.median(tail)) if tail else 0.0
+        tail = self._tail(skip)
+        return _percentiles(tail)["p50"] if tail else 0.0
+
+    def percentiles(self, skip: int = 1) -> dict:
+        """``{p50, p95, p99, mean, max}`` of the steady-state step walls."""
+        return _percentiles(self._tail(skip))

@@ -60,6 +60,7 @@ import numpy as np
 from repro.distributed.fault_tolerance import elastic_batch_schedule
 from repro.distributed.sharding import shard_plan_apply
 from repro.models import gan
+from repro.obs import trace as obs
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.optim.compression import error_feedback_compress, zero_error_state
 from repro.timing import StepTimer
@@ -122,13 +123,14 @@ class GanTrainer:
     """
 
     def __init__(self, cfg, tcfg: GanTrainerConfig, data, *,
-                 ckpt_dir=None, hooks=None, log_fn=print):
+                 ckpt_dir=None, hooks=None, log_fn=print, recorder=None):
         self.cfg = cfg
         self.tcfg = tcfg
         self.data = data
         self.ckpt_dir = str(ckpt_dir) if ckpt_dir is not None else None
         self.hooks = hooks
         self.log = log_fn
+        self.recorder = recorder   # optional obs FlightRecorder
         self.micro, self.accum = tcfg.micro_accum
         # the jointly-tuned whole-generator step plan, compiled ONCE at the
         # micro batch size, before the step is traced
@@ -347,38 +349,71 @@ class GanTrainer:
             history = []
             t0 = time.time()
             self.timer = StepTimer()
-            while step < steps and not self._stop:
-                if self.hooks is not None:
-                    self.hooks.on_step_start(step)
-                reals, zs = self._batches(step)
-                state, metrics = self._step_fn(state, reals, zs)
-                metrics = jax.device_get(metrics)
-                dt = self.timer.tick()
-                skipped = int(metrics["skipped"])
-                self.skipped_steps += skipped
-                if skipped:
-                    self.log(
-                        f"[gan-trainer] step {step}: non-finite step; "
-                        f"params untouched (total skipped "
-                        f"{self.skipped_steps})"
+            try:
+                while step < steps and not self._stop:
+                    with obs.span("train.step", step=step):
+                        if self.hooks is not None:
+                            self.hooks.on_step_start(step)
+                        with obs.span("train.batch", step=step):
+                            reals, zs = self._batches(step)
+                        with obs.span("train.step_fn", step=step):
+                            state, metrics = self._step_fn(state, reals, zs)
+                            metrics = jax.device_get(metrics)
+                    dt = self.timer.tick()
+                    obs.observe("train.step_s", dt)
+                    obs.counter("train.steps")
+                    skipped = int(metrics["skipped"])
+                    self.skipped_steps += skipped
+                    if self.recorder is not None:
+                        self.recorder.record(
+                            "train.step", step=step, dt=dt, skipped=skipped,
+                            g_loss=float(metrics["g_loss"]),
+                            d_loss=float(metrics["d_loss"]),
+                        )
+                    if skipped:
+                        obs.counter("train.skipped_steps")
+                        if self.recorder is not None:
+                            self.recorder.dump(
+                                "nan_guard",
+                                extra={"step": step,
+                                       "skipped_total": self.skipped_steps},
+                            )
+                        self.log(
+                            f"[gan-trainer] step {step}: non-finite step; "
+                            f"params untouched (total skipped "
+                            f"{self.skipped_steps})"
+                        )
+                    history.append({
+                        "step": step,
+                        "g_loss": float(metrics["g_loss"]),
+                        "d_loss": float(metrics["d_loss"]),
+                        "skipped": skipped,
+                    })
+                    if step % self.tcfg.log_every == 0:
+                        self.log(
+                            f"[gan-trainer] step {step} "
+                            f"g_loss {float(metrics['g_loss']):.4f} "
+                            f"d_loss {float(metrics['d_loss']):.4f} "
+                            f"({dt * 1e3:.1f}ms, "
+                            f"{time.time() - t0:.1f}s total)"
+                        )
+                    if (self.ckpt_dir
+                            and (step + 1) % self.tcfg.ckpt_every == 0):
+                        self._save(step + 1, state)
+                    step += 1
+            except Exception as e:
+                # post-mortem artifact before the crash propagates (covers
+                # SimulatedCrash from the fault harness and real faults);
+                # the checkpoint story is unchanged — at most the steps
+                # since the last save are lost
+                if self.recorder is not None:
+                    self.recorder.record("crash", step=step,
+                                         error=type(e).__name__)
+                    self.recorder.dump(
+                        f"crash:{type(e).__name__}",
+                        extra={"step": step, "error": str(e)},
                     )
-                history.append({
-                    "step": step,
-                    "g_loss": float(metrics["g_loss"]),
-                    "d_loss": float(metrics["d_loss"]),
-                    "skipped": skipped,
-                })
-                if step % self.tcfg.log_every == 0:
-                    self.log(
-                        f"[gan-trainer] step {step} "
-                        f"g_loss {float(metrics['g_loss']):.4f} "
-                        f"d_loss {float(metrics['d_loss']):.4f} "
-                        f"({dt * 1e3:.1f}ms, {time.time() - t0:.1f}s total)"
-                    )
-                if (self.ckpt_dir
-                        and (step + 1) % self.tcfg.ckpt_every == 0):
-                    self._save(step + 1, state)
-                step += 1
+                raise
 
             if self.ckpt_dir and (self._stop or step >= steps):
                 self._save(step, state)
@@ -387,6 +422,10 @@ class GanTrainer:
                         f"[gan-trainer] SIGTERM: checkpointed step {step}, "
                         "exiting cleanly"
                     )
+            if self._stop and self.recorder is not None:
+                # after the final save so the dump reflects durable state
+                self.recorder.record("sigterm", step=step)
+                self.recorder.dump("sigterm", extra={"step": step})
             return state, history
         finally:
             if prev_handler is not None:

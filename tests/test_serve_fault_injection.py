@@ -151,3 +151,114 @@ def test_identical_plans_fire_identically():
     b = drive(ServeFaultInjector(plan))
     assert a == b
     assert [e[0] for e in a] == ["transient", "crash", "nan", "revive"]
+
+
+# --------------------------------------------------- flight recorder dumps
+# The post-mortem seam: a recorder riding the REAL supervisor must leave a
+# JSON artifact when an injected fault drives a replica to DEAD or trips
+# the output guard (the trigger matrix in repro.obs.flight_recorder).
+
+import jax
+
+from repro.models import gan
+from repro.obs.flight_recorder import FlightRecorder
+from repro.serve import BucketPolicy, GenRequest, Replica, ReplicaSupervisor
+
+TINY = gan.GANConfig("tiny", 8, ((4, 4, 4), (8, 4, 3)))
+
+
+@pytest.fixture(scope="module")
+def tiny_gan():
+    return TINY, gan.generator_init(jax.random.key(0), TINY)
+
+
+def _recorder_supervisor(cfg, params, plan, tmp_path, **kwargs):
+    clock = FakeClock()
+    inj = ServeFaultInjector(plan, clock=clock)
+    replicas = [Replica(f"r{i}", dispatch_hook=inj.hook) for i in range(2)]
+    recorder = FlightRecorder(dump_dir=str(tmp_path), clock=clock)
+    kwargs.setdefault("timeout_s", 1.0)
+    sup = ReplicaSupervisor(
+        replicas,
+        BucketPolicy(buckets=(1, 2), max_wait_s=0.0, max_queue=64),
+        clock=clock, recorder=recorder, **kwargs,
+    )
+    sup.register(cfg, params)
+    return sup, recorder, clock
+
+
+def _one(rng, cfg):
+    return GenRequest(cfg.name,
+                      rng.standard_normal((1, cfg.z_dim)).astype(np.float32))
+
+
+def test_replica_dead_dumps_flight_artifact(tmp_path, tiny_gan):
+    """Crash -> SUSPECT, then the due probe fails -> DEAD must write one
+    dump whose ring holds the transition history and whose extra carries
+    the replica states and the conservation ledger at death."""
+    cfg, params = tiny_gan
+    plan = ServeFaultPlan(crash_at=(("r0", 1),))
+    sup, recorder, clock = _recorder_supervisor(
+        cfg, params, plan, tmp_path, probe_backoff_s=0.05)
+    rng = np.random.default_rng(0)
+    sup.serve([_one(rng, cfg) for _ in range(3)])
+    assert sup.replica_states()["r0"] == "SUSPECT"
+    assert recorder.dumps == []              # not dead yet: no artifact
+    clock.advance(0.06)                      # past the probe backoff
+    sup.serve([_one(rng, cfg)])              # due probe fails -> DEAD
+    assert sup.replica_states()["r0"] == "DEAD"
+    assert len(recorder.dumps) == 1
+    blob = FlightRecorder.load(recorder.dumps[0])
+    assert blob["trigger"] == "replica_dead:r0"
+    assert blob["extra"]["states"]["r0"] == "DEAD"
+    assert "admitted" in blob["extra"]["conservation"]
+    edges = [(e["old"], e["new"]) for e in blob["events"]
+             if e["kind"] == "replica.transition"]
+    assert ("HEALTHY", "SUSPECT") in edges
+    assert ("SUSPECT", "DEAD") in edges
+    # the DEAD entry carries the next-probe deadline (the stamped bugfix)
+    dead = [e for e in blob["events"]
+            if e["kind"] == "replica.transition" and e["new"] == "DEAD"][0]
+    assert dead["next_probe_at"] is not None
+    assert dead["backoff_s"] > 0.0
+
+
+def test_nonfinite_output_dumps_flight_artifact(tmp_path, tiny_gan):
+    """A poisoned output plane (NaN guard trip) must dump before the
+    batch is retried — and the retried batch still serves finite."""
+    cfg, params = tiny_gan
+    plan = ServeFaultPlan(nan_at=(("r0", 1),))
+    sup, recorder, _ = _recorder_supervisor(cfg, params, plan, tmp_path)
+    rng = np.random.default_rng(1)
+    reqs = [_one(rng, cfg) for _ in range(4)]
+    sup.serve(reqs)
+    assert sup.metrics.nonfinite == 1
+    assert all(r.done and np.isfinite(np.asarray(r.output)).all()
+               for r in reqs)
+    triggers = [FlightRecorder.load(p)["trigger"] for p in recorder.dumps]
+    assert "nonfinite:r0" in triggers
+    blob = FlightRecorder.load(
+        recorder.dumps[triggers.index("nonfinite:r0")])
+    assert blob["extra"]["model"] == cfg.name
+    assert any(e["kind"] == "nonfinite" for e in blob["events"])
+
+
+def test_no_recorder_means_no_artifacts(tmp_path, tiny_gan):
+    """The recorder is strictly opt-in: the same chaos run without one
+    writes nothing anywhere (no default dump directory side effects)."""
+    cfg, params = tiny_gan
+    clock = FakeClock()
+    inj = ServeFaultInjector(
+        ServeFaultPlan(crash_at=(("r0", 1),)), clock=clock)
+    replicas = [Replica(f"r{i}", dispatch_hook=inj.hook) for i in range(2)]
+    sup = ReplicaSupervisor(
+        replicas,
+        BucketPolicy(buckets=(1, 2), max_wait_s=0.0, max_queue=64),
+        clock=clock, timeout_s=1.0,
+    )
+    sup.register(cfg, params)
+    rng = np.random.default_rng(2)
+    reqs = [_one(rng, cfg) for _ in range(3)]
+    sup.serve(reqs)
+    assert all(r.done for r in reqs)
+    assert list(tmp_path.iterdir()) == []
